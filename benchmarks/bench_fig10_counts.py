@@ -1,0 +1,40 @@
+"""Paper Fig. 10 — dynamic #finish / #async per kernel × scheme.
+
+Reproduces the benchmark-statistics table (scaled inputs; the paper's
+count *algebra* — which kernels collapse to 1 finish, which stay flat —
+is the claim under test)."""
+
+from __future__ import annotations
+
+from repro.core import build_kernel, run_scheme
+
+from .common import save, table
+
+KERNELS = ["BFS", "BY", "DR", "DST", "MST", "NQ", "HL", "FL"]
+SCHEMES = ["UnOpt", "LC", "DCAFE"]
+
+
+def run(scale: str = "bench", workers: int = 8):
+    rows = []
+    records = []
+    for kernel in KERNELS:
+        k = build_kernel(kernel, scale)
+        for scheme in SCHEMES:
+            r = run_scheme(k, scheme, workers=workers)
+            rows.append([kernel, scheme, r.finishes, r.asyncs,
+                         "ok" if r.ok else "FAIL"])
+            records.append(r.row())
+    print(f"== Fig. 10: dynamic task/finish counts "
+          f"(workers={workers}, scale={scale})")
+    table(rows, ["kernel", "scheme", "#finish", "#async", "correct"])
+    save("fig10_counts", records)
+    # headline assertions (paper: NQ/BFS collapse to 1 finish under DCAFE)
+    by = {(r["kernel"], r["scheme"]): r for r in records}
+    assert by[("NQ", "DCAFE")]["finishes"] == 1
+    assert by[("BFS", "DCAFE")]["finishes"] == 1
+    assert by[("FL", "DCAFE")]["asyncs"] < by[("FL", "LC")]["asyncs"]
+    return records
+
+
+if __name__ == "__main__":
+    run()

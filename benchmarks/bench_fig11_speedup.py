@@ -1,0 +1,48 @@
+"""Paper Fig. 11 — DCAFE speedup over LC for varying worker counts
+(simulated time; the paper's 16-core Intel / 64-core AMD sweeps)."""
+
+from __future__ import annotations
+
+from repro.core import build_kernel, run_scheme
+
+from .common import save, table
+
+KERNELS = ["BFS", "BY", "DR", "DST", "MST", "NQ", "HL", "FL"]
+WORKERS = [1, 2, 4, 8, 16, 32, 64]
+
+
+def geomean(xs):
+    import math
+
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def run(scale: str = "bench"):
+    records = []
+    rows = []
+    for kernel in KERNELS:
+        k = build_kernel(kernel, scale)
+        row = [kernel]
+        for w in WORKERS:
+            lc = run_scheme(k, "LC", workers=w)
+            dc = run_scheme(k, "DCAFE", workers=w)
+            sp = lc.time / dc.time if dc.time > 0 else float("inf")
+            row.append(f"{sp:.2f}")
+            records.append(dict(kernel=kernel, workers=w,
+                                lc_time=lc.time, dcafe_time=dc.time,
+                                speedup=sp))
+        rows.append(row)
+    print("== Fig. 11: speedup = time(LC)/time(DCAFE) vs workers")
+    table(rows, ["kernel"] + [f"W{w}" for w in WORKERS])
+    gm = {w: geomean([r["speedup"] for r in records if r["workers"] == w])
+          for w in WORKERS}
+    print("geomean speedup by workers:",
+          {w: round(v, 2) for w, v in gm.items()})
+    print("(paper: geomean 5.75x @16-core Intel, 4.16x @64-core AMD)\n")
+    save("fig11_speedup", dict(records=records, geomean=gm))
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig. 12 — all schemes normalised to UnOpt at max workers
+(Serial, UnOpt+AFE, LC, LC+AFE, DLBC, DCAFE)."""
+
+from __future__ import annotations
+
+from repro.core import build_kernel, run_scheme
+
+from .common import save, table
+
+KERNELS = ["BFS", "BY", "DR", "DST", "MST", "NQ", "HL", "FL"]
+SCHEMES = ["Serial", "UnOpt", "UnOpt+AFE", "LC", "LC+AFE", "DLBC", "DCAFE"]
+
+
+def run(scale: str = "bench", workers: int = 16):
+    records = []
+    rows = []
+    for kernel in KERNELS:
+        k = build_kernel(kernel, scale)
+        base = run_scheme(k, "UnOpt", workers=workers)
+        row = [kernel]
+        for scheme in SCHEMES:
+            r = run_scheme(k, scheme, workers=workers)
+            ratio = base.time / r.time if r.time > 0 else float("inf")
+            row.append(f"{ratio:.2f}")
+            records.append(dict(kernel=kernel, scheme=scheme, time=r.time,
+                                vs_unopt=ratio, ok=r.ok))
+        rows.append(row)
+    print(f"== Fig. 12: time(UnOpt)/time(scheme), workers={workers}")
+    table(rows, ["kernel"] + SCHEMES)
+    import math
+
+    for scheme in ("LC", "LC+AFE", "DLBC", "DCAFE"):
+        vals = [r["vs_unopt"] for r in records if r["scheme"] == scheme
+                and r["vs_unopt"] > 0]
+        gm = math.exp(sum(math.log(v) for v in vals) / len(vals))
+        print(f"geomean {scheme} vs UnOpt: {gm:.2f}x")
+    print("(paper @16-core Intel: LC 2.2x, LC+AFE 1.31x, DLBC 12.28x, "
+          "DCAFE 12.64x)\n")
+    save("fig12_schemes", records)
+    return records
+
+
+if __name__ == "__main__":
+    run()

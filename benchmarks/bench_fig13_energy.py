@@ -1,0 +1,39 @@
+"""Paper Fig. 13 — simulated energy (busy/idle power model + per-op
+energy) normalised to UnOpt; the RAPL-measurement analogue."""
+
+from __future__ import annotations
+
+from repro.core import build_kernel, run_scheme
+
+from .common import save, table
+
+KERNELS = ["BFS", "BY", "DR", "DST", "MST", "NQ", "HL", "FL"]
+
+
+def run(scale: str = "bench", workers: int = 16):
+    records = []
+    rows = []
+    for kernel in KERNELS:
+        k = build_kernel(kernel, scale)
+        un = run_scheme(k, "UnOpt", workers=workers)
+        lc = run_scheme(k, "LC", workers=workers)
+        dc = run_scheme(k, "DCAFE", workers=workers)
+        rows.append([kernel, f"{lc.energy / un.energy:.3f}",
+                     f"{dc.energy / un.energy:.3f}",
+                     f"{dc.energy / lc.energy:.3f}"])
+        records.append(dict(kernel=kernel, unopt=un.energy, lc=lc.energy,
+                            dcafe=dc.energy))
+    print(f"== Fig. 13: energy normalised to UnOpt (workers={workers})")
+    table(rows, ["kernel", "LC/UnOpt", "DCAFE/UnOpt", "DCAFE/LC"])
+    import math
+
+    ratios = [r["dcafe"] / r["lc"] for r in records]
+    gm = math.exp(sum(math.log(x) for x in ratios) / len(ratios))
+    print(f"geomean DCAFE/LC energy: {gm:.3f} "
+          f"(paper: 0.288 ⇒ 71.2% less)\n")
+    save("fig13_energy", records)
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""§Roofline — per (arch × shape × mesh) terms from the dry-run artifacts
+(compiled on 512 host devices by repro.launch.dryrun; trip-count-scaled
+HLO analysis)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import save, table
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_cells(mesh="16x16", policy="afe", schedule="masked"):
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob(f"{mesh}_*_{policy}_{schedule}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "ok":
+            cells.append(rec)
+    return cells
+
+
+def run(mesh: str = "16x16"):
+    cells = load_cells(mesh)
+    if not cells:
+        print(f"(no dry-run artifacts for mesh {mesh} yet — run "
+              "`python -m repro.launch.dryrun` first)")
+        return []
+    rows = []
+    for rec in sorted(cells, key=lambda r: (r["arch"], r["shape"])):
+        t = rec["roofline"]
+        rows.append([
+            rec["arch"], rec["shape"],
+            f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+            f"{t['collective_s']:.4f}", t["dominant"],
+            f"{rec['roofline_fraction']:.3f}",
+            f"{t['useful_flops_ratio']:.2f}",
+            f"{rec['hbm_per_device_gb']:.1f}",
+            "yes" if rec["fits_hbm"] else "NO",
+        ])
+    print(f"== Roofline terms per cell (mesh {mesh}; seconds/step; "
+          "v5e 197TF/s bf16, 819GB/s HBM, 50GB/s ICI)")
+    table(rows, ["arch", "shape", "compute_s", "memory_s", "collective_s",
+                 "dominant", "roofline_frac", "useful_flops",
+                 "hbm_GB", "fits"])
+    save(f"roofline_{mesh}", cells)
+    return cells
+
+
+if __name__ == "__main__":
+    run()
+    run("2x16x16")

@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: table printing + JSON result persistence."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+
+def save(name: str, payload):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = RESULTS_DIR / f"{name}.json"
+    out.write_text(json.dumps(payload, indent=1, default=str))
+    return out
+
+
+def table(rows, headers):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    line = "  ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    print()
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

@@ -1,0 +1,50 @@
+"""Benchmark entrypoint: `PYTHONPATH=src python -m benchmarks.run [names]`.
+
+One benchmark per paper table/figure plus the TPU-side analogues:
+
+  fig10      — dynamic #finish/#async per kernel × scheme   (paper Fig. 10)
+  fig11      — DCAFE vs LC speedup across worker counts     (paper Fig. 11)
+  fig12      — full scheme ladder normalised to UnOpt       (paper Fig. 12)
+  fig13      — simulated energy                             (paper Fig. 13)
+  sync       — HLO collectives per AFE sync policy          (Fig. 10 on TPU)
+  moe        — DLBC vs LC MoE dispatch drop rates           (§3.2 on TPU)
+  batcher    — DLBC continuous batching vs LC fixed batches (§3.2 serving)
+  design     — paper §6 DLBC design-choice study
+  roofline   — per-cell roofline table from dry-run artifacts (§Roofline)
+"""
+
+import sys
+import time
+
+from . import (
+    bench_batcher, bench_design_choices, bench_fig10_counts,
+    bench_fig11_speedup, bench_fig12_schemes, bench_fig13_energy,
+    bench_moe_dispatch, bench_roofline, bench_sync_policy,
+)
+
+ALL = {
+    "fig10": bench_fig10_counts.run,
+    "fig11": bench_fig11_speedup.run,
+    "fig12": bench_fig12_schemes.run,
+    "fig13": bench_fig13_energy.run,
+    "design": bench_design_choices.run,
+    "moe": bench_moe_dispatch.run,
+    "batcher": bench_batcher.run,
+    "sync": bench_sync_policy.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main(argv=None):
+    names = (argv or sys.argv[1:]) or list(ALL)
+    t0 = time.time()
+    for name in names:
+        print(f"\n{'=' * 72}\nBENCH {name}\n{'=' * 72}")
+        t = time.time()
+        ALL[name]()
+        print(f"[{name} done in {time.time() - t:.1f}s]")
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

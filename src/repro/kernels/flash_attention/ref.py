@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,S,H,dh); k/v: (B,T,KV,dh) — naive full-matrix softmax."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bskgt", qg, kf) * dh ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgt,btkd->bskgd", p, vf)
+    return o.reshape(B, S, H, dh).astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the grouped expert-FFN kernel (interpret on CPU)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .moe_gmm import moe_gmm
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_f", "interpret"))
+def moe_gmm_op(buf, w1, w3, w2, *, block_c=128, block_f=128,
+               interpret=False):
+    return moe_gmm(buf, w1, w3, w2, block_c=block_c, block_f=block_f,
+                   interpret=interpret)
+
+
+def moe_gmm_auto(buf, w1, w3, w2, *, block_c=128, block_f=128):
+    return moe_gmm_op(buf, w1, w3, w2, block_c=block_c, block_f=block_f,
+                      interpret=jax.default_backend() != "tpu")

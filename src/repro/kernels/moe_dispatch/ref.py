@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the grouped expert-FFN kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(buf, w1, w3, w2):
+    """buf: (E, C, d); w1/w3: (E, d, f); w2: (E, f, d)."""
+    x = buf.astype(jnp.float32)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w1.astype(jnp.float32))) \
+        * jnp.einsum("ecd,edf->ecf", x, w3.astype(jnp.float32))
+    return jnp.einsum("ecf,efd->ecd", h,
+                      w2.astype(jnp.float32)).astype(buf.dtype)

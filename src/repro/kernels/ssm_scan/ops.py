@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the selective-scan kernel (interpret on CPU)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ssm_scan import ssm_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def ssm_scan_op(dA, dBx, C, *, chunk=128, block_d=256, interpret=False):
+    return ssm_scan(dA, dBx, C, chunk=chunk, block_d=block_d,
+                    interpret=interpret)
+
+
+def ssm_scan_auto(dA, dBx, C, *, chunk=128, block_d=256):
+    return ssm_scan_op(dA, dBx, C, chunk=chunk, block_d=block_d,
+                       interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dA, dBx, C):
+    """dA/dBx: (B, L, Di, N); C: (B, L, N) → y: (B, L, Di)."""
+
+    def step(h, args):
+        a, bx, c = args
+        h = a * h + bx                       # (B, Di, N)
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    B, L, Di, N = dA.shape
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(dA, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dBx, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(C, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1)  # (B, L, Di)

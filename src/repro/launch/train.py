@@ -1,0 +1,56 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real steps on the available devices (smoke configs on CPU; the full
+configs are for TPU pods — their distribution plan is proven by
+``dryrun.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.base import ShapeConfig
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import POLICIES, StepConfig
+from ..train.trainer import TrainerConfig, run_training
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--policy", default="afe", choices=POLICIES)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--failure-at", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train",
+                        microbatches=args.microbatches)
+    scfg = StepConfig(policy=args.policy,
+                      q_chunk=min(512, args.seq_len),
+                      k_chunk=min(512, args.seq_len),
+                      ssm_chunk=min(128, args.seq_len))
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, failure_at=args.failure_at)
+    rep = run_training(cfg, shape, tcfg, scfg, AdamWConfig())
+    print(json.dumps({
+        "arch": cfg.name, "completed": rep.completed,
+        "resumed_from": rep.resumed_from,
+        "first_loss": rep.losses[0] if rep.losses else None,
+        "last_loss": rep.losses[-1] if rep.losses else None,
+        "stragglers": rep.stragglers,
+        "mean_step_s": sum(rep.step_times) / max(1, len(rep.step_times)),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from . import blocks, layers, moe, model, ssm  # noqa: F401
+from .model import (  # noqa: F401
+    cache_shapes, decode_step, forward, init_cache, init_params, loss_fn,
+    param_shapes,
+)

@@ -1,0 +1,342 @@
+"""Unified model: init / param_specs / forward / prefill / decode for all
+ten assigned architectures.
+
+Layer stacking: homogeneous layer stacks get a leading (L,) dim and run
+under ``jax.lax.scan`` with rematerialisation (compile-time stays flat in
+depth; remat bounds activation memory).  Heterogeneous archs decompose
+into homogeneous stacks:
+
+* encdec  — encoder stack (bidir) + decoder stack (causal + cross)
+* vlm     — groups of (cross_every-1) self layers + 1 cross layer,
+            outer scan over groups, inner scan over self layers
+* others  — one stack
+
+The dry-run never materialises params: ``param_shapes()`` returns a
+ShapeDtypeStruct pytree consumed by ``jax.jit(...).lower()``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import act_spec, batch_spec, shard, shard_act, shard_logits
+from . import blocks as B
+from . import layers as L
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_shapes(shapes: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), shapes)
+
+
+def _stacked_init(key, cfg, dtype, kind: str, n: int) -> dict:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: B.layer_init(k, cfg, dtype, kind))(keys)
+
+
+def _plan(cfg: ModelConfig):
+    """Stack plan: list of (name, kind, n_layers, nested_inner)."""
+    if cfg.family == "dense":
+        return [("layers", "dense", cfg.n_layers, 0)]
+    if cfg.family == "moe":
+        return [("layers", "moe", cfg.n_layers, 0)]
+    if cfg.family == "ssm":
+        return [("layers", "ssm", cfg.n_layers, 0)]
+    if cfg.family == "hybrid":
+        return [("layers", "hybrid", cfg.n_layers, 0)]
+    if cfg.family == "encdec":
+        return [("enc_layers", "enc", cfg.enc_layers, 0),
+                ("dec_layers", "dec", cfg.n_layers, 0)]
+    if cfg.family == "vlm":
+        k = cfg.cross_every
+        assert cfg.n_layers % k == 0
+        g = cfg.n_layers // k
+        return [("self_layers", "dense", g, k - 1),  # (g, k-1, ...)
+                ("cross_layers", "cross", g, 0)]
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    out = {"embed": jax.ShapeDtypeStruct((cfg.padded_vocab, cfg.d_model), dt),
+           "final_norm": L.norm_shapes(cfg.d_model, cfg.norm, dt)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = jax.ShapeDtypeStruct((cfg.d_model, cfg.padded_vocab), dt)
+    for name, kind, n, inner in _plan(cfg):
+        s = B.layer_shapes(cfg, dt, kind)
+        s = _stack_shapes(s, inner) if inner else s
+        out[name] = _stack_shapes(s, n)
+    if cfg.family == "encdec":
+        out["enc_norm"] = L.norm_shapes(cfg.d_model, cfg.norm, dt)
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    keys = iter(jax.random.split(key, 8))
+    out = {
+        "embed": (jax.random.normal(next(keys), (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        "final_norm": L.norm_init(next(keys), cfg.d_model, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = (jax.random.normal(
+            next(keys), (cfg.d_model, cfg.padded_vocab), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dt)
+    for name, kind, n, inner in _plan(cfg):
+        k = next(keys)
+        if inner:
+            ks = jax.random.split(k, n)
+            out[name] = jax.vmap(
+                lambda kk: _stacked_init(kk, cfg, dt, kind, inner))(ks)
+        else:
+            out[name] = _stacked_init(k, cfg, dt, kind, n)
+    if cfg.family == "encdec":
+        out["enc_norm"] = L.norm_init(next(keys), cfg.d_model, cfg.norm, dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _scan_stack(stack_params, x, fn, remat: bool = True):
+    body = fn
+    if remat:
+        body = jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def step(carry, layer_p):
+        return body(carry, layer_p), None
+
+    out, _ = jax.lax.scan(step, x, stack_params)
+    return out
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *,
+            schedule: str = "masked", q_chunk: int = 1024,
+            k_chunk: int = 1024, ssm_chunk: int = 256,
+            remat: bool = True, last_only: bool = False) -> jnp.ndarray:
+    """Logits for (B, S) tokens (training / prefill).
+
+    ``last_only`` (prefill): slice to the final position BEFORE the
+    lm_head matmul — the full (B, S, V) logits tensor is never built
+    (minitron prefill_32k: 66 GB → fits; §Perf iteration 2)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard_act(x)
+
+    kw = dict(schedule=schedule, q_chunk=q_chunk, k_chunk=k_chunk,
+              ssm_chunk=ssm_chunk)
+
+    ctx = None
+    if cfg.family == "encdec":
+        enc = batch["enc_frames"].astype(x.dtype)
+        enc = shard_act(enc)
+        enc = _scan_stack(
+            params["enc_layers"], enc,
+            lambda h, p: B.layer_apply(p, cfg, h, "enc", causal=False, **kw),
+            remat=remat)
+        ctx = L.norm_apply(params["enc_norm"], enc, cfg.norm)
+    if cfg.family == "vlm":
+        ctx = shard_act(batch["vis_embed"].astype(x.dtype))
+
+    if cfg.family == "vlm":
+        k = cfg.cross_every
+
+        def group(h, gp):
+            h = _scan_stack(
+                gp["self"], h,
+                lambda hh, p: B.layer_apply(p, cfg, hh, "dense", **kw),
+                remat=remat)
+            fn = lambda hh, p: B.layer_apply(p, cfg, hh, "cross", ctx=ctx,
+                                             **kw)
+            if remat:
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable)
+            return fn(h, gp["cross"])
+
+        def gstep(carry, gp):
+            return group(carry, gp), None
+
+        x, _ = jax.lax.scan(
+            gstep, x,
+            {"self": params["self_layers"], "cross": params["cross_layers"]})
+    elif cfg.family == "encdec":
+        x = _scan_stack(
+            params["dec_layers"], x,
+            lambda h, p: B.layer_apply(p, cfg, h, "dec", ctx=ctx, **kw),
+            remat=remat)
+    else:
+        kind = _plan(cfg)[0][1]
+        x = _scan_stack(
+            params["layers"], x,
+            lambda h, p: B.layer_apply(p, cfg, h, kind, **kw),
+            remat=remat)
+
+    if last_only:
+        x = x[:, -1:]
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return shard_logits(logits)
+
+
+def loss_fn(params, cfg, batch, **kw):
+    logits = forward(params, cfg, batch, **kw)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        # Mask vocab-padding logits out of the partition function.
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, bsz: int, cache_len: int) -> dict:
+    dt = _dtype(cfg)
+    out = {}
+    for name, kind, n, inner in _plan(cfg):
+        if kind == "enc":
+            continue
+        s = B.layer_cache_shapes(cfg, kind, bsz, cache_len, dt)
+        s = _stack_shapes(s, inner) if inner else s
+        out[name] = _stack_shapes(s, n)
+    if cfg.family == "encdec":
+        h, KV = cfg.head_dim, cfg.n_kv_heads
+        out["cross_kv"] = {
+            "k": jax.ShapeDtypeStruct(
+                (cfg.n_layers, bsz, cfg.enc_seq, KV, h), dt),
+            "v": jax.ShapeDtypeStruct(
+                (cfg.n_layers, bsz, cfg.enc_seq, KV, h), dt),
+        }
+    if cfg.family == "vlm":
+        h, KV = cfg.head_dim, cfg.n_kv_heads
+        g = cfg.n_layers // cfg.cross_every
+        out["cross_kv"] = {
+            "k": jax.ShapeDtypeStruct((g, bsz, cfg.vis_seq, KV, h), dt),
+            "v": jax.ShapeDtypeStruct((g, bsz, cfg.vis_seq, KV, h), dt),
+        }
+    return out
+
+
+def init_cache(cfg: ModelConfig, bsz: int, cache_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, bsz, cache_len))
+
+
+def _idx(tree, i):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        tree)
+
+
+def _dus(tree, upd, i):
+    return jax.tree.map(
+        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+            a, u.astype(a.dtype), i, 0),
+        tree, upd)
+
+
+def _decode_scan(stack_params, cache_stack, x, step_fn):
+    """Scan over layers carrying the FULL cache and updating it in place
+    (dynamic-update-slice on the carry).  Unlike an xs→ys scan this keeps
+    a single cache buffer alive — the xs input + stacked ys output pattern
+    double-buffered multi-GB KV caches (phi3 decode_32k: 15.5 GB temp →
+    §Perf iteration 4)."""
+    n = jax.tree.leaves(stack_params)[0].shape[0]
+
+    def body(carry, l):
+        x, cache = carry
+        lp = _idx(stack_params, l)
+        lc = _idx(cache, l)
+        x, nc = step_fn(x, lp, lc, l)
+        cache = _dus(cache, nc, l)
+        return (x, cache), None
+
+    (x, cache_stack), _ = jax.lax.scan(
+        body, (x, cache_stack), jnp.arange(n))
+    return x, cache_stack
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                batch: dict) -> tuple:
+    """One token for every sequence in the batch against the cache.
+
+    batch = {"tokens": (B, 1), "cache_index": ()} — returns
+    (logits (B, vocab), new_cache).
+    """
+    tokens, cache_index = batch["tokens"], batch["cache_index"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard_act(x)
+    new_cache = dict(cache)
+
+    if cfg.family == "vlm":
+        gp_tree = {"self": params["self_layers"],
+                   "cross": params["cross_layers"]}
+        g = jax.tree.leaves(params["cross_layers"])[0].shape[0]
+
+        def gbody(carry, gi):
+            x, self_cache = carry
+            gp = _idx(gp_tree, gi)
+            gcache = _idx(self_cache, gi)
+
+            def self_step(xx, lp, lc, _l):
+                return B.layer_decode_apply(lp, cfg, xx, lc, cache_index,
+                                            "dense")
+
+            x, gcache = _decode_scan(gp["self"], gcache, x, self_step)
+            x, _ = B.layer_decode_apply(
+                gp["cross"], cfg, x, {}, cache_index, "cross",
+                ctx_kv=_idx(cache["cross_kv"], gi))
+            self_cache = _dus(self_cache, gcache, gi)
+            return (x, self_cache), None
+
+        (x, new_self), _ = jax.lax.scan(
+            gbody, (x, cache["self_layers"]), jnp.arange(g))
+        new_cache["self_layers"] = new_self
+    elif cfg.family == "encdec":
+        def dec_step(xx, lp, lc, l):
+            return B.layer_decode_apply(
+                lp, cfg, xx, lc, cache_index, "dec",
+                ctx_kv=_idx(cache["cross_kv"], l))
+
+        x, new_dec = _decode_scan(params["dec_layers"],
+                                  cache["dec_layers"], x, dec_step)
+        new_cache["dec_layers"] = new_dec
+    else:
+        kind = _plan(cfg)[0][1]
+
+        def lyr_step(xx, lp, lc, _l):
+            return B.layer_decode_apply(lp, cfg, xx, lc, cache_index, kind)
+
+        x, new_layers = _decode_scan(params["layers"], cache["layers"], x,
+                                     lyr_step)
+        new_cache["layers"] = new_layers
+
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    return shard_logits(logits), new_cache

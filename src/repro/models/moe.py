@@ -1,0 +1,197 @@
+"""Mixture-of-Experts with DLBC-balanced dispatch.
+
+The paper's DLBC policy, mapped onto MoE token routing (DESIGN.md §2.2):
+
+* **LC dispatch** (`moe_dispatch="lc"`) — the static-chunking baseline:
+  classic GShard top-k with fixed per-expert capacity
+  ``C = ceil(T·top_k/E)·cf``; tokens whose position in their chosen expert
+  exceeds C are **dropped** (the residual/identity path carries them).
+  This is the "chunking oblivious to actual load" failure mode the paper
+  attributes to LC.
+
+* **DLBC dispatch** (`moe_dispatch="dlbc"`) — two-round load balancing:
+  round 1 fills the eqChunk-balanced capacity; overflow tokens are
+  *re-routed* in round 2 to their next-choice expert against the residual
+  capacity — the "re-check for idle workers after serial iterations"
+  mechanism in static-shape SPMD form.  Same total buffer, strictly fewer
+  dropped tokens (measured in tests/benchmarks).
+
+Expert compute is a capacity-buffer grouped matmul
+``(E, C, d) × (E, d, f)`` — einsum on the XLA path; the Pallas kernel in
+repro/kernels/moe_dispatch implements the same contraction with explicit
+VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _norm_init
+
+
+def moe_shapes(cfg, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": jax.ShapeDtypeStruct((d, E), jnp.float32),
+        "w1": jax.ShapeDtypeStruct((E, d, f), dtype),
+        "w3": jax.ShapeDtypeStruct((E, d, f), dtype),
+        "w2": jax.ShapeDtypeStruct((E, f, d), dtype),
+    }
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": _norm_init(k0, (d, E), d ** -0.5, jnp.float32),
+        "w1": _norm_init(k1, (E, d, f), d ** -0.5, dtype),
+        "w3": _norm_init(k3, (E, d, f), d ** -0.5, dtype),
+        "w2": _norm_init(k2, (E, f, d), f ** -0.5, dtype),
+    }
+
+
+def capacity(T: int, E: int, top_k: int, cf: float) -> int:
+    c = int(math.ceil(T * top_k / E * cf))
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU lane alignment
+
+
+def _positions_in_expert(expert_ids: jnp.ndarray, E: int,
+                         base: jnp.ndarray = None) -> jnp.ndarray:
+    """Running slot index of each (token, choice) within its expert.
+
+    expert_ids: (T, K) int32.  Counts in choice-major order (all k=0 first)
+    so primary choices win slots — the paper's "current worker gets the
+    smallest chunk" priority rule for remainder distribution.
+    ``base``: (E,) pre-occupied slots per expert (round 2).
+    """
+    T, K = expert_ids.shape
+    flat = expert_ids.T.reshape(-1)  # choice-major (K*T,)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)  # (K*T, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # position among same-expert slots
+    pos = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    if base is not None:
+        pos = pos + base[flat]
+    return pos.reshape(K, T).T  # (T, K)
+
+
+def _expert_load(expert_ids: jnp.ndarray, mask: jnp.ndarray, E: int):
+    flat = expert_ids.reshape(-1)
+    return jnp.sum(
+        jax.nn.one_hot(flat, E, dtype=jnp.int32)
+        * mask.reshape(-1)[:, None], axis=0)
+
+
+def route(x: jnp.ndarray, router_w: jnp.ndarray, top_k: int):
+    """x: (T, d) → (gates (T,K) fp32, expert_ids (T,K) int32, full probs)."""
+    logits = x.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, ids.astype(jnp.int32), probs
+
+
+def _dispatch_combine(x, gates, ids, pos, keep, E, C, p, act):
+    """Scatter tokens into (E, C, d) buffers, run expert FFN, gather back."""
+    T, d = x.shape
+    K = ids.shape[1]
+    slot = ids * C + jnp.minimum(pos, C - 1)  # (T, K)
+    keepf = keep.astype(x.dtype)
+    buf = jnp.zeros((E * C, d), x.dtype)
+    # Slots are unique per (expert, pos) by construction → add == set.
+    buf = buf.at[slot.reshape(-1)].add(
+        (x[:, None, :] * keepf[..., None]).reshape(T * K, d))
+    buf = buf.reshape(E, C, d)
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"])) * \
+            jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w1"]))
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(E * C, d)
+    gathered = out[slot.reshape(-1)].reshape(T, K, d)
+    w = (gates * keep).astype(x.dtype)
+    return jnp.einsum("tkd,tk->td", gathered, w)
+
+
+def moe_apply(p: dict, cfg, x: jnp.ndarray,
+              return_stats: bool = False):
+    """x: (B, S, d) or (T, d).  Dispatch per cfg.moe_dispatch."""
+    # NOTE (refuted hypothesis — EXPERIMENTS.md §Perf iteration 7):
+    # constraining the flattened token dim to (data × model) sharding was
+    # expected to shrink dispatch buffers 16×; measured: GSPMD reshards
+    # the slot scatter/gather with MORE collectives (mixtral train_4k
+    # collective term 62 s → 158 s).  The principled fix is expert-parallel
+    # all-to-all dispatch (tokens exchanged between expert shards), left
+    # as the next lever with napkin math in §Perf.
+    orig_shape = x.shape
+    if x.ndim == 3:
+        x = x.reshape(-1, x.shape[-1])
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(T, E, K, cfg.moe_capacity_factor)
+    gates, ids, probs = route(x, p["router"], K)
+
+    if cfg.moe_dispatch == "lc":
+        pos = _positions_in_expert(ids, E)
+        keep = pos < C
+        y = _dispatch_combine(x, gates, ids, pos, keep, E, C, p, cfg.act)
+        dropped = jnp.sum(~keep)
+    else:
+        # --- DLBC round 1: eqChunk-balanced primary dispatch -------------
+        pos1 = _positions_in_expert(ids, E)
+        keep1 = pos1 < C
+        # --- round 2: overflow re-routed to the next-best expert --------
+        # (the serial block's "re-check for idle workers": tokens that
+        # found their expert full try the least-loaded alternative).
+        load = _expert_load(ids, keep1, E)          # (E,) used slots
+        resid = jnp.maximum(C - load, 0)            # idle capacity
+        overflow = ~keep1                           # (T, K)
+        # next-best expert = argmax of probs weighted by residual capacity
+        avail = probs * (resid[None, :] > 0)
+        alt_ids = jnp.argmax(avail, axis=-1).astype(jnp.int32)  # (T,)
+        ids2 = jnp.where(overflow, alt_ids[:, None], ids)
+        pos2 = _positions_in_expert(
+            jnp.where(overflow, ids2, E),  # only overflow tokens count
+            E + 1, base=jnp.concatenate([load, jnp.zeros((1,), jnp.int32)]),
+        )
+        ids_final = jnp.where(overflow, ids2, ids)
+        pos_final = jnp.where(overflow, pos2, pos1)
+        keep = pos_final < C
+        # Rerouted tokens are weighted by the probability of the expert
+        # that actually serves them (router-consistent combine).
+        alt_gate = jnp.take_along_axis(probs, ids_final.astype(jnp.int32),
+                                       axis=-1).astype(gates.dtype)
+        gates_final = jnp.where(overflow, alt_gate, gates)
+        y = _dispatch_combine(x, gates_final, ids_final, pos_final, keep, E,
+                              C, p, cfg.act)
+        dropped = jnp.sum(~keep)
+
+    y = y.reshape(orig_shape)
+    if return_stats:
+        frac = dropped / (T * K)
+        return y, {"dropped_frac": frac}
+    return y
+
+
+def moe_ref(p: dict, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense oracle: every token through its top-k experts, no capacity.
+    The no-drop ground truth that dispatch quality is measured against."""
+    orig_shape = x.shape
+    if x.ndim == 3:
+        x = x.reshape(-1, x.shape[-1])
+    gates, ids, _ = route(x, p["router"], cfg.top_k)
+    T, d = x.shape
+    outs = []
+    for e in range(cfg.n_experts):
+        if cfg.act == "swiglu":
+            h = jax.nn.silu(x @ p["w1"][e]) * (x @ p["w3"][e])
+        else:
+            h = jax.nn.gelu(x @ p["w1"][e])
+        outs.append(h @ p["w2"][e])
+    dense = jnp.stack(outs, axis=1)  # (T, E, d)
+    sel = jnp.take_along_axis(dense, ids[..., None], axis=1)  # (T, K, d)
+    return jnp.einsum("tkd,tk->td", sel, gates.astype(x.dtype)).reshape(
+        orig_shape)

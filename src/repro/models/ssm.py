@@ -1,0 +1,161 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba mamba heads).
+
+TPU adaptation: the recurrence is computed as a *chunked* scan —
+sequential ``lax.scan`` over sequence chunks carrying the (d_inner, N)
+state, with a parallel ``associative_scan`` inside each chunk.  The chunk
+size is the DLBC ``eqChunk`` analogue: it balances VMEM working-set
+against scan latency (hillclimbed in EXPERIMENTS.md §Perf).
+
+The same math has a Pallas kernel (repro/kernels/ssm_scan) for the
+single-chunk hot loop; this module is the lowering used by the dry-run
+and the pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _norm_init, dense_apply, dense_init, dense_shapes
+
+
+def ssm_shapes(cfg, dtype) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, cw = cfg.dt_rank, cfg.conv_width
+    return {
+        "in_proj": dense_shapes(d, 2 * di, False, dtype),
+        "conv_w": jax.ShapeDtypeStruct((cw, di), dtype),
+        "conv_b": jax.ShapeDtypeStruct((di,), dtype),
+        "x_proj": dense_shapes(di, dtr + 2 * n, False, dtype),
+        "dt_proj": dense_shapes(dtr, di, True, dtype),
+        "A_log": jax.ShapeDtypeStruct((di, n), jnp.float32),
+        "D": jax.ShapeDtypeStruct((di,), jnp.float32),
+        "out_proj": dense_shapes(di, d, False, dtype),
+    }
+
+
+def ssm_init(key, cfg, dtype) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, cw = cfg.dt_rank, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, False, dtype),
+        "conv_w": _norm_init(ks[1], (cw, di), cw ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * n, False, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, True, dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, False, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time.  x: (B, L, Di); w: (cw, Di).
+    state: (B, cw-1, Di) trailing inputs from the previous step (decode).
+    Returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+cw-1, Di)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        y = y + xp[:, i : i + x.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, -(cw - 1):] if cw > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+    return y.astype(x.dtype), new_state
+
+
+def _ssm_params(p: dict, cfg, x: jnp.ndarray):
+    """Input-dependent (dt, B, C) and the discretised (dA, dBx)."""
+    dtr, n = cfg.dt_rank, cfg.ssm_state
+    dbc = dense_apply(p["x_proj"], x)  # (..., dtr + 2n)
+    dt, Bc, Cc = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dense_apply(p["dt_proj"], dt).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])  # (Di, N)
+    dA = jnp.exp(dt[..., None] * A)                       # (..., Di, N)
+    dBx = (dt * x.astype(jnp.float32))[..., None] * \
+        Bc[..., None, :].astype(jnp.float32)              # (..., Di, N)
+    return dA, dBx, Cc.astype(jnp.float32)
+
+
+def ssm_scan_chunked(p: dict, cfg, x: jnp.ndarray, chunk: int = 256):
+    """Selective scan over (B, L, Di) input. Returns (B, L, Di).
+
+    The input-dependent (dA, dBx, C) tensors — (B, L, Di, N) fp32, i.e.
+    4·N× the activation size — are computed PER CHUNK inside the scan and
+    rematerialised on the backward pass: materialising them for the whole
+    sequence is what blew falcon-mamba train_4k past HBM (26.9 GB/device
+    → §Perf iteration 3).  Working set: one (B, chunk, Di, N) block.
+    """
+    B, L, di = x.shape
+    n = cfg.ssm_state
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    nchunks = L // chunk
+    xc = jnp.moveaxis(x.reshape(B, nchunks, chunk, di), 1, 0)
+
+    def combine(a, b):
+        # (A1, X1) ∘ (A2, X2) = (A2·A1, A2·X1 + X2)
+        return a[0] * b[0], a[1] * b[0] + b[1]
+
+    @jax.checkpoint
+    def chunk_body(h, x_c):
+        dA_c, dBx_c, C_c = _ssm_params(p, cfg, x_c)  # (B, chunk, Di, N)
+        A_acc, X_acc = jax.lax.associative_scan(
+            combine, (dA_c, dBx_c), axis=1)
+        hs = A_acc * h[:, None] + X_acc               # (B, chunk, Di, N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C_c)      # (B, chunk, Di)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, xc)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, di)
+    return y + x.astype(jnp.float32) * p["D"]
+
+
+def ssm_apply(p: dict, cfg, x: jnp.ndarray, chunk: int = 256) -> jnp.ndarray:
+    """Full mamba block: in_proj → conv → selective scan → gate → out."""
+    xz = dense_apply(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, _ = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    xi = jax.nn.silu(xi)
+    y = ssm_scan_chunked(p, cfg, xi, chunk=chunk)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return dense_apply(p["out_proj"], y.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) per token — this is why SSM archs run long_500k)
+# ---------------------------------------------------------------------------
+
+
+def ssm_cache_shapes(cfg, B: int, dtype) -> dict:
+    di, n, cw = cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    return {
+        "conv": jax.ShapeDtypeStruct((B, cw - 1, di), dtype),
+        "h": jax.ShapeDtypeStruct((B, di, n), jnp.float32),
+    }
+
+
+def ssm_decode_apply(p: dict, cfg, x: jnp.ndarray, cache: dict):
+    """x: (B, 1, D). Returns (y, new_cache)."""
+    xz = dense_apply(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"],
+                                  state=cache["conv"])
+    xi = jax.nn.silu(xi)
+    dA, dBx, Cc = _ssm_params(p, cfg, xi[:, 0])  # (B, Di, N), (B, N)
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cc) + xi[:, 0].astype(jnp.float32) * p["D"]
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = dense_apply(p["out_proj"], y.astype(x.dtype))[:, None]
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "h": h}

@@ -1,0 +1,166 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per chip, seconds) for TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / 197e12          (bf16 peak)
+    memory     = HLO_bytes_per_device / 819e9           (HBM bw)
+    collective = collective_bytes_per_device / 50e9     (ICI link bw)
+
+``cost_analysis()`` reports the per-device (SPMD-partitioned) module, so
+the spec's ``X / (chips × BW)`` with global X equals ``X_per_device / BW``
+as computed here.  collective_bytes is NOT in cost_analysis — it is parsed
+from the optimised HLO: the summed result-shape bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# matches op definitions like:  %all-reduce.5 = bf16[128,512]{1,0} all-reduce(
+_DEF_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_,\[\]{}\s]*\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per-op-kind {count, bytes} from optimised HLO text.
+
+    ``-start``/``-done`` async pairs are counted once (on -start; a bare
+    ``-done`` has no shape on its LHS worth double counting).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: counted at -start
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2).lower()
+        nbytes = _shape_bytes(m.group(1))
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collective_bytes_per_device: float = 0.0
+    collective_ops: int = 0
+    collective_by_kind: dict = field(default_factory=dict)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0          # 6·N·D (·N_active for MoE)
+    useful_flops_ratio: float = 0.0   # model / (HLO × chips)
+    chips: int = 0
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def roofline_from_artifacts(cost: dict, hlo_text: str, *, chips: int,
+                            model_flops: float = 0.0) -> RooflineTerms:
+    t = RooflineTerms(chips=chips)
+    t.flops_per_device = float(cost.get("flops", 0.0))
+    t.bytes_per_device = float(cost.get("bytes accessed", 0.0))
+    stats = collective_stats(hlo_text)
+    t.collective_by_kind = stats
+    t.collective_bytes_per_device = float(
+        sum(v["bytes"] for v in stats.values()))
+    t.collective_ops = sum(v["count"] for v in stats.values())
+    t.compute_s = t.flops_per_device / PEAK_FLOPS
+    t.memory_s = t.bytes_per_device / HBM_BW
+    t.collective_s = t.collective_bytes_per_device / ICI_BW
+    terms = {"compute": t.compute_s, "memory": t.memory_s,
+             "collective": t.collective_s}
+    t.dominant = max(terms, key=terms.get)
+    t.model_flops = model_flops
+    total_hlo = t.flops_per_device * chips
+    t.useful_flops_ratio = (model_flops / total_hlo) if total_hlo else 0.0
+    return t
+
+
+def roofline_from_opcost(opcost, *, chips: int,
+                         model_flops: float = 0.0) -> RooflineTerms:
+    """Roofline terms from the trip-count-scaled HLO analyzer
+    (:mod:`repro.roofline.hlo_analyzer`) — the §Roofline methodology,
+    since ``cost_analysis()`` counts scan bodies once."""
+    t = RooflineTerms(chips=chips)
+    t.flops_per_device = float(opcost.flops)
+    t.bytes_per_device = float(opcost.bytes)
+    t.collective_by_kind = {
+        k: {"count": opcost.coll_count.get(k, 0.0),
+            "bytes": opcost.coll_bytes.get(k, 0.0)}
+        for k in set(opcost.coll_count) | set(opcost.coll_bytes)
+    }
+    t.collective_bytes_per_device = float(opcost.total_coll_bytes)
+    t.collective_ops = int(opcost.total_coll_count)
+    t.compute_s = t.flops_per_device / PEAK_FLOPS
+    t.memory_s = t.bytes_per_device / HBM_BW
+    t.collective_s = t.collective_bytes_per_device / ICI_BW
+    terms = {"compute": t.compute_s, "memory": t.memory_s,
+             "collective": t.collective_s}
+    t.dominant = max(terms, key=terms.get)
+    t.model_flops = model_flops
+    total_hlo = t.flops_per_device * chips
+    t.useful_flops_ratio = (model_flops / total_hlo) if total_hlo else 0.0
+    return t
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D with N = active params; D = tokens processed by the step."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens  # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_fraction(t: RooflineTerms) -> float:
+    """Fraction of the roofline bound the useful model FLOPs achieve:
+    (model_flops / chips / peak) / max(term)."""
+    bound = max(t.compute_s, t.memory_s, t.collective_s)
+    if bound <= 0 or t.chips == 0:
+        return 0.0
+    useful_s = t.model_flops / t.chips / PEAK_FLOPS
+    return useful_s / bound

@@ -1,0 +1,387 @@
+"""Trip-count-aware HLO cost analyzer.
+
+``compiled.cost_analysis()`` counts while-loop (scan) bodies ONCE,
+regardless of trip count (verified empirically — see EXPERIMENTS.md
+§Roofline methodology).  Every model here scans over layers and
+microbatches, so naive numbers undercount FLOPs/bytes/collective traffic
+by 10–400×.  This analyzer parses the optimised HLO text:
+
+* builds a per-computation symbol table (op name → result type) so dot
+  contractions and operand traffic can be sized (operands are not
+  type-annotated inline in modern HLO);
+* reads while-loop trip counts from ``backend_config=
+  {"known_trip_count":{"n":...}}`` (falling back to the condition's
+  ``compare(iter, constant(N)), direction=LT``);
+* accumulates, scaled by the product of enclosing trip counts:
+  - **flops**: dot ops, 2 · numel(result) · Π(contracted lhs dims);
+  - **bytes**: HBM-traffic proxy — Σ over top-level (post-fusion) ops of
+    result + operand bytes (fusion internals stay on-chip);
+  - **collectives**: count + payload bytes by kind.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([a-z][\w\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CONST_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*s(?:32|64)\[\]\s+constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_TRAFFIC = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "iota", "compare", "add",
+})
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt in _DTYPE_BYTES:
+            total += _numel(m.group(2)) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_dims(type_str: str) -> Optional[list]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class OpCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "OpCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + v * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def total_coll_count(self) -> float:
+        return sum(self.coll_count.values())
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[dict] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+    constants: Dict[str, int] = field(default_factory=dict)
+
+
+class HLOAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, OpCost] = {}
+
+    # -- parsing --------------------------------------------------------------
+
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for line in text.splitlines():
+            if line and not line[0].isspace():
+                hdr = _COMP_HDR.match(line)
+                if hdr and line.rstrip().endswith("{"):
+                    cur = Computation(name=hdr.group(2))
+                    self.comps[cur.name] = cur
+                    if hdr.group(1):
+                        self.entry = cur.name
+                    # parameters typed in the header: "(x: f32[2,3], ...)"
+                    for pm in re.finditer(
+                            r"([\w.\-]+):\s*(\(?[a-z][^,)]*(?:\)[^,)]*)?)",
+                            line.split("->")[0]):
+                        cur.types[pm.group(1)] = pm.group(2)
+                    continue
+            if cur is None:
+                continue
+            om = _OP_RE.match(line)
+            if om:
+                opname, rtype, kind = om.groups()
+                cur.types[opname] = rtype
+                cur.ops.append({"name": opname, "kind": kind, "line": line,
+                                "rtype": rtype})
+                cm = _CONST_RE.search(line)
+                if cm:
+                    cur.constants[cm.group(1)] = int(cm.group(2))
+                # parameters appear as ops too
+                if kind == "parameter":
+                    cur.types[opname] = rtype
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _operands(self, line: str, kind: str) -> List[str]:
+        """Operand names inside the instruction's parens."""
+        start = line.find(f" {kind}(")
+        if start < 0:
+            return []
+        seg = line[start + len(kind) + 2:]
+        # cut at the closing paren of the call (first unbalanced ')')
+        depth = 1
+        out_chars = []
+        for ch in seg:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            out_chars.append(ch)
+        return _OPERAND_RE.findall("".join(out_chars))
+
+    def _operand_bytes(self, comp: Computation, line: str, kind: str) -> int:
+        total = 0
+        for name in self._operands(line, kind):
+            t = comp.types.get(name)
+            if t:
+                total += _type_bytes(t)
+        return total
+
+    def _fusion_param_access(self, inner_name: str) -> list:
+        """Per-parameter effective read size inside a fused computation.
+
+        Returns a list indexed by parameter number: None = the parameter is
+        read in full; an int = only that many bytes are read (the parameter
+        is consumed exclusively by dynamic-slice/gather ops — the stacked
+        layer-params pattern inside scan bodies, which otherwise inflates
+        traffic by the layer count).
+        """
+        if not hasattr(self, "_fusion_memo"):
+            self._fusion_memo: Dict[str, list] = {}
+        if inner_name in self._fusion_memo:
+            return self._fusion_memo[inner_name]
+        inner = self.comps.get(inner_name)
+        out: list = []
+        if inner is None:
+            self._fusion_memo[inner_name] = out
+            return out
+        params = []  # (index, name)
+        for iop in inner.ops:
+            if iop["kind"] == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", iop["line"])
+                if pm:
+                    params.append((int(pm.group(1)), iop["name"]))
+        n = (max(i for i, _ in params) + 1) if params else 0
+        out = [None] * n
+        for idx, pname in params:
+            uses = []
+            pat = re.compile(rf"%{re.escape(pname)}\b")
+            for iop in inner.ops:
+                if iop["kind"] == "parameter" or iop["name"] == pname:
+                    continue
+                seg = iop["line"].split(iop["kind"] + "(", 1)
+                if len(seg) > 1 and pat.search(seg[1].split(")")[0] if ")"
+                                               in seg[1] else seg[1]):
+                    uses.append(iop)
+            if not uses:
+                continue
+            if all(u["kind"] in ("dynamic-slice", "gather") for u in uses):
+                out[idx] = max(_type_bytes(u["rtype"]) for u in uses)
+            elif all(u["kind"] == "dynamic-update-slice"
+                     and self._operands(u["line"],
+                                        "dynamic-update-slice")[:1]
+                     == [pname] for u in uses):
+                # in-place scatter target: traffic = the written region,
+                # which the DUS update operand sizes (operand 1)
+                eff = 0
+                for u in uses:
+                    ops_ = self._operands(u["line"], "dynamic-update-slice")
+                    t = inner.types.get(ops_[1]) if len(ops_) > 1 else None
+                    eff += _type_bytes(t) if t else 0
+                out[idx] = eff
+        self._fusion_memo[inner_name] = out
+        return out
+
+    def _fusion_operand_bytes(self, comp: Computation, line: str,
+                              inner_name: Optional[str]) -> int:
+        operands = self._operands(line, "fusion")
+        access = self._fusion_param_access(inner_name) if inner_name else []
+        total = 0
+        for i, name in enumerate(operands):
+            eff = access[i] if i < len(access) else None
+            if eff is not None:
+                total += eff
+                continue
+            t = comp.types.get(name)
+            if t:
+                total += _type_bytes(t)
+        return total
+
+    def _dot_flops(self, comp: Computation, op: dict) -> float:
+        result_dims = _type_dims(op["rtype"])
+        if result_dims is None:
+            return 0.0
+        operands = self._operands(op["line"], "dot")
+        if not operands:
+            return 0.0
+        lhs_t = comp.types.get(operands[0])
+        lhs_dims = _type_dims(lhs_t) if lhs_t else None
+        contracted = 1
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op["line"])
+        if lhs_dims and cm and cm.group(1):
+            for idx in cm.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contracted *= lhs_dims[i]
+        result_numel = 1
+        for d in result_dims:
+            result_numel *= d
+        return 2.0 * result_numel * contracted
+
+    def _trip_count(self, line: str, cond_name: Optional[str]) -> int:
+        m = _TRIP_RE.search(line)
+        if m:
+            return max(1, int(m.group(1)))
+        cond = self.comps.get(cond_name or "")
+        if cond is None:
+            return 1
+        for op in cond.ops:
+            if op["kind"] == "compare" and "direction=LT" in op["line"]:
+                for cname, val in cond.constants.items():
+                    if cname in op["line"]:
+                        return max(1, val)
+        if cond.constants:
+            return max(1, max(cond.constants.values()))
+        return 1
+
+    # -- cost accumulation -------------------------------------------------------
+
+    def cost_of(self, comp_name: str) -> OpCost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = OpCost()
+        self._memo[comp_name] = total
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return total
+        for op in comp.ops:
+            line, kind = op["line"], op["kind"]
+            if kind == "while":
+                body = cond = None
+                for m in re.finditer(r"(condition|body)=%?([\w.\-]+)", line):
+                    if m.group(1) == "body":
+                        body = m.group(2)
+                    else:
+                        cond = m.group(2)
+                trips = self._trip_count(line, cond)
+                if body:
+                    total.add(self.cost_of(body), mult=trips)
+                continue
+            if kind == "conditional":
+                bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if bm:
+                    branches = [b.strip().lstrip("%")
+                                for b in bm.group(1).split(",") if b.strip()]
+                    costs = [self.cost_of(b) for b in branches]
+                    if costs:
+                        total.add(max(costs, key=lambda c: c.flops + c.bytes))
+                continue
+            if kind in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|calls|called_computation)"
+                              r"=%?([\w.\-]+)", line)
+                if m:
+                    total.add(self.cost_of(m.group(1)))
+                continue
+            if kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", line)
+                inner_name = m.group(1) if m else None
+                result_bytes = _type_bytes(op["rtype"])
+                if inner_name:
+                    inner = self.comps.get(inner_name)
+                    if inner:
+                        dus_upd = 0
+                        has_dus_root = False
+                        for iop in inner.ops:
+                            if iop["kind"] == "dot":
+                                total.flops += self._dot_flops(inner, iop)
+                            if iop["kind"] == "dynamic-update-slice":
+                                has_dus_root = True
+                                ops_ = self._operands(
+                                    iop["line"], "dynamic-update-slice")
+                                t = inner.types.get(ops_[1]) \
+                                    if len(ops_) > 1 else None
+                                dus_upd += _type_bytes(t) if t else 0
+                        if has_dus_root and dus_upd:
+                            # result aliases the scatter target: the write
+                            # is only the updated region
+                            result_bytes = dus_upd
+                total.bytes += result_bytes + \
+                    self._fusion_operand_bytes(comp, line, inner_name)
+                continue
+            if kind == "dot":
+                total.flops += self._dot_flops(comp, op)
+                total.bytes += _type_bytes(op["rtype"]) + \
+                    self._operand_bytes(comp, line, kind)
+                continue
+            base = kind
+            for suffix in ("-start", "-done"):
+                if base.endswith(suffix):
+                    base = base[: -len(suffix)]
+            if base in _COLL_KINDS:
+                if kind.endswith("-done"):
+                    continue
+                nbytes = _type_bytes(op["rtype"])
+                total.coll_bytes[base] = total.coll_bytes.get(base, 0.0) \
+                    + nbytes
+                total.coll_count[base] = total.coll_count.get(base, 0.0) + 1
+                total.bytes += nbytes
+                continue
+            if kind in _SKIP_TRAFFIC:
+                continue
+            if kind in ("dynamic-slice", "gather"):
+                # reads only the sliced region (stacked-params access)
+                total.bytes += 2 * _type_bytes(op["rtype"])
+                continue
+            if kind == "dynamic-update-slice":
+                ops_ = self._operands(line, kind)
+                upd = comp.types.get(ops_[1]) if len(ops_) > 1 else None
+                total.bytes += 2 * (_type_bytes(upd) if upd
+                                    else _type_bytes(op["rtype"]))
+                continue
+            total.bytes += _type_bytes(op["rtype"]) + \
+                self._operand_bytes(comp, line, kind)
+        return total
+
+    def entry_cost(self) -> OpCost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze_hlo(hlo_text: str) -> OpCost:
+    return HLOAnalyzer(hlo_text).entry_cost()

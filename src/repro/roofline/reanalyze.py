@@ -1,0 +1,52 @@
+"""Recompute roofline fields of dry-run artifacts from their saved HLO
+dumps (no recompilation): ``python -m repro.roofline.reanalyze [dir]``."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import zstandard
+
+from ..configs import SHAPES, get_config
+from .analysis import (
+    model_flops_estimate, roofline_fraction, roofline_from_opcost,
+)
+from .hlo_analyzer import analyze_hlo
+
+
+def reanalyze(path: Path) -> bool:
+    rec = json.loads(path.read_text())
+    if rec.get("status") != "ok":
+        return False
+    hlo_path = path.with_suffix("").with_suffix("")  # strip .json
+    hlo_path = path.parent / (path.stem + ".hlo.zst")
+    if not hlo_path.exists():
+        return False
+    hlo = zstandard.ZstdDecompressor().decompress(
+        hlo_path.read_bytes(), max_output_size=4_000_000_000).decode()
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    opcost = analyze_hlo(hlo)
+    terms = roofline_from_opcost(
+        opcost, chips=rec["chips"],
+        model_flops=model_flops_estimate(cfg, shape))
+    rec["roofline"] = terms.as_dict()
+    rec["roofline_fraction"] = round(roofline_fraction(terms), 4)
+    path.write_text(json.dumps(rec, indent=1))
+    return True
+
+
+def main(argv=None):
+    d = Path((argv or sys.argv[1:] or ["experiments/dryrun"])[0])
+    n = 0
+    for f in sorted(d.glob("*.json")):
+        if reanalyze(f):
+            n += 1
+            print("reanalyzed", f.name)
+    print(f"done: {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Sharded AdamW with fp32 master weights.
+
+Optimizer state shards exactly like the params (FSDP under the "afe"
+policies, replicated-over-data under the pure-DP "unopt"/"lc" policies) —
+see train_step.py for the policy ladder.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    master_fp32: bool = True
+
+
+def opt_state_shapes(param_shapes: dict, ocfg: AdamWConfig) -> dict:
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    out = {
+        "m": jax.tree.map(f32, param_shapes),
+        "v": jax.tree.map(f32, param_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if ocfg.master_fp32:
+        out["master"] = jax.tree.map(f32, param_shapes)
+    return out
+
+
+def init_opt_state(params: dict, ocfg: AdamWConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    out = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if ocfg.master_fp32:
+        out["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return out
+
+
+def _schedule(step, ocfg: AdamWConfig):
+    warm = jnp.minimum(step.astype(jnp.float32) / ocfg.warmup_steps, 1.0)
+    return ocfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(params: dict, grads: dict, state: dict, ocfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics).
+
+    The non-finite-gradient guard is the exception-semantics analogue
+    (DESIGN.md §2.2): a bad microbatch must not corrupt the step — the
+    update is skipped atomically, like an exception caught at the single
+    outer finish.
+    """
+    step = state["step"] + 1
+    lr = _schedule(step, ocfg)
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    clip = jnp.where(
+        gnorm > ocfg.grad_clip, ocfg.grad_clip / jnp.maximum(gnorm, 1e-9), 1.0)
+
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        base = master.astype(jnp.float32)
+        new_master = base - lr * (mh / (jnp.sqrt(vh) + ocfg.eps)
+                                  + ocfg.weight_decay * base)
+        # Exception guard: skip the whole update on non-finite grads.
+        m2 = jnp.where(finite, m2, m)
+        v2 = jnp.where(finite, v2, v)
+        new_master = jnp.where(finite, new_master, base)
+        return new_master.astype(p.dtype), m2, v2, new_master
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_ma = jax.tree.leaves(masters)
+    new_p, new_m, new_v, new_ma = [], [], [], []
+    for p, g, m, v, ma in zip(flat_p, flat_g, flat_m, flat_v, flat_ma):
+        a, b, c, d = upd(p, g, m, v, ma)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+        new_ma.append(d)
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "step": step,
+    }
+    if "master" in state:
+        new_state["master"] = jax.tree.unflatten(treedef, new_ma)
+    metrics = {"grad_norm": gnorm, "lr": lr,
+               "nonfinite_skipped": (~finite).astype(jnp.int32)}
+    return jax.tree.unflatten(treedef, new_p), new_state, metrics

@@ -1,0 +1,234 @@
+"""Unit tests for the DCAFE mini-transformations (paper Figs. 2/4/8/9),
+including the Fig. 5 running example and the exception-extended variants."""
+
+import pytest
+
+from repro.core.afe import apply_afe
+from repro.core.analysis import Summaries, bound_locals
+from repro.core.errors import ExcValue
+from repro.core.ir import (
+    Assign, Async, Call, Compute, Finish, ForLoop, If, MethodDef, Program,
+    Seq, Skip, Throw, TryCatch, binop, const, expr, seq, var, walk,
+)
+from repro.core.runtime import run_program
+from repro.core.transforms import (
+    Ctx, async_finish_interchange, finish_expansion_lower,
+    finish_expansion_upper, finish_fusion_pair, finish_if_interchange,
+    loop_finish_interchange, rewrite_fixpoint, tail_finish_elimination,
+)
+
+
+def bump(name, amount=1, cost=0.1):
+    return Compute(
+        fn=lambda env, _n=name, _a=amount: env.set_heap(_n, env[_n] + _a),
+        reads=frozenset({f"{name}[+]"}), writes=frozenset({f"{name}[+]"}),
+        cost=cost, label=f"{name}+={amount}")
+
+
+def read_into(dst, src, cost=0.1):
+    return Compute(
+        fn=lambda env, _d=dst, _s=src: env.set_heap(_d, env[_s]),
+        reads=frozenset({src}), writes=frozenset({dst}), cost=cost,
+        label=f"{dst}={src}")
+
+
+def ctx_for(prog, method="main", no_exc=False):
+    s = Summaries.compute(prog)
+    m = prog.method(method)
+    return Ctx(summaries=s, assume_no_exceptions=no_exc,
+               private=frozenset(m.params) | bound_locals(m.body))
+
+
+def count_finishes(stmt):
+    return sum(1 for n in walk(stmt) if isinstance(n, Finish))
+
+
+def run_heap(prog, heap, workers=3):
+    r = run_program(prog, n_workers=workers, heap=dict(heap))
+    assert r.ok, r.error
+    return r.heap, r
+
+
+# ---------------------------------------------------------------------------
+# Individual rules (exception-free forms)
+# ---------------------------------------------------------------------------
+
+
+def prog_of(body, extra_methods=()):
+    return Program(methods=(MethodDef(name="main", params=(), body=body),)
+                   + tuple(extra_methods))
+
+
+def test_loop_finish_interchange():
+    body = ForLoop(loopvar="i", lo=const(0), hi=const(4), step=const(1),
+                   body=Finish(body=Async(body=bump("x"))))
+    p = prog_of(body)
+    out = loop_finish_interchange(body, ctx_for(p))
+    assert isinstance(out, Finish)
+    assert count_finishes(out) == 1
+    h1, _ = run_heap(p, {"x": 0})
+    h2, _ = run_heap(prog_of(out), {"x": 0})
+    assert h1["x"] == h2["x"] == 4
+
+
+def test_finish_fusion():
+    a = Finish(body=Async(body=bump("x")))
+    b = Finish(body=Async(body=bump("y")))
+    p = prog_of(Seq((a, b)))
+    fused = finish_fusion_pair(a, b, ctx_for(p))
+    assert fused is not None and count_finishes(fused) == 1
+    h, _ = run_heap(prog_of(fused), {"x": 0, "y": 0})
+    assert h["x"] == 1 and h["y"] == 1
+
+
+def test_finish_fusion_blocked_by_dependence():
+    a = Finish(body=Async(body=read_into("y", "x")))
+    # second finish body reads y which the first's e-async writes
+    b = Finish(body=read_into("z", "y"))
+    p = prog_of(Seq((a, b)))
+    assert finish_fusion_pair(a, b, ctx_for(p)) is None
+
+
+def test_tail_finish_elimination():
+    s = Finish(body=Finish(body=Async(body=bump("x"))))
+    p = prog_of(s)
+    out = tail_finish_elimination(s, ctx_for(p))
+    assert out is not None and count_finishes(out) == 1
+
+
+def test_finish_if_interchange():
+    s = If(cond=expr(lambda env: env["flag"] > 0, "flag", label="flag>0"),
+           then=Finish(body=Async(body=bump("x"))))
+    p = prog_of(s)
+    out = finish_if_interchange(s, ctx_for(p))
+    assert out is not None
+    # v = cond; finish { if (v) ... }
+    h, _ = run_heap(prog_of(out), {"flag": 1, "x": 0})
+    assert h["x"] == 1
+    h, _ = run_heap(prog_of(out), {"flag": 0, "x": 0})
+    assert h["x"] == 0
+
+
+def test_finish_expansion_upper_lower():
+    s1 = bump("a")
+    f = Finish(body=Async(body=bump("x")))
+    s2 = bump("b")
+    p = prog_of(Seq((s1, f, s2)))
+    up = finish_expansion_upper(s1, f, ctx_for(p))
+    assert isinstance(up, Finish)
+    low = finish_expansion_lower(f, s2, ctx_for(p))
+    assert isinstance(low, Finish)
+
+
+def test_finish_expansion_lower_blocked_by_dependence():
+    f = Finish(body=Async(body=read_into("y", "x")))
+    s2 = read_into("z", "y")
+    p = prog_of(Seq((f, s2)))
+    assert finish_expansion_lower(f, s2, ctx_for(p)) is None
+
+
+def test_async_finish_interchange():
+    s = Async(body=Finish(body=Async(body=bump("x"))))
+    p = prog_of(Finish(body=s))
+    out = async_finish_interchange(s, ctx_for(p))
+    assert isinstance(out, Finish)
+    assert isinstance(out.body, Async)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 running example: fixpoint rewrite collapses to one finish
+# ---------------------------------------------------------------------------
+
+
+def test_fig5_running_example():
+    # S1; finish{S2}; if(c){ finish{ async{ finish{ for{ finish S3 } } } } }; finish{S4}
+    s3 = Finish(body=Async(body=bump("s3")))
+    inner_loop = ForLoop(loopvar="i", lo=const(0), hi=const(3),
+                         step=const(1), body=s3)
+    body = seq(
+        bump("s1"),
+        Finish(body=Async(body=bump("s2"))),
+        If(cond=expr(lambda env: env["c"] > 0, "c", label="c>0"),
+           then=Finish(body=Async(body=Finish(body=inner_loop)))),
+        Finish(body=Async(body=bump("s4"))),
+    )
+    p = prog_of(body)
+    ctx = ctx_for(p, no_exc=True)
+    out = rewrite_fixpoint(body, ctx)
+    assert count_finishes(out) < count_finishes(body)
+    h1, r1 = run_heap(p, {"s1": 0, "s2": 0, "s3": 0, "s4": 0, "c": 1})
+    h2, r2 = run_heap(prog_of(out), {"s1": 0, "s2": 0, "s3": 0, "s4": 0,
+                                     "c": 1})
+    for k in ("s1", "s2", "s3", "s4"):
+        assert h1[k] == h2[k]
+    assert r2.counters.finishes <= r1.counters.finishes
+
+
+# ---------------------------------------------------------------------------
+# Exceptions (Figs. 8/9 semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_exception_in_async_wrapped_as_me():
+    body = TryCatch(
+        body=Finish(body=Async(body=Throw(exc_type="Ex"))),
+        exc_var="e",
+        handler=Compute(
+            fn=lambda env: env.set_heap(
+                "caught",
+                tuple(sorted(x.type_name for x in env["e"].flatten()))),
+            reads=frozenset({"e"}), writes=frozenset({"caught"}), cost=0.0,
+            label="record"),
+        exc_types=("ME", "Exception"),
+    )
+    h, r = run_heap(prog_of(body), {"caught": None})
+    assert h["caught"] == ("Ex",)
+
+
+def test_expansion_upper_exception_variant_preserves_semantics():
+    # S1 throws; finish{S2} — after the transform the exception must still
+    # escape un-wrapped and S2 must not run.
+    s1 = If(cond=expr(lambda env: env["boom"] > 0, "boom", label="boom"),
+            then=Throw(exc_type="Ex"))
+    f = Finish(body=Async(body=bump("x")))
+    p = prog_of(seq(
+        TryCatch(body=Seq((s1, f)), exc_var="e",
+                 handler=bump("caught"), exc_types=("Ex",)),
+    ))
+    ctx = ctx_for(p)
+    out = rewrite_fixpoint(p.method("main").body, ctx)
+    p2 = p.with_method(MethodDef(name="main", params=(), body=out))
+    from repro.core.ir import lower_program_pending
+
+    p2 = lower_program_pending(p2)
+    for boom in (0, 1):
+        h1, _ = run_heap(p, {"x": 0, "caught": 0, "boom": boom})
+        h2, _ = run_heap(p2, {"x": 0, "caught": 0, "boom": boom})
+        assert h1["x"] == h2["x"], boom
+        assert h1["caught"] == h2["caught"], boom
+
+
+def test_afe_with_exceptions_nqueens_like():
+    """A recursive kernel whose tasks may throw: AFE must keep semantics
+    (gex protocol) while still reducing finishes where legal."""
+    rec_body = Finish(
+        body=ForLoop(
+            loopvar="i", lo=const(0), hi=const(2), step=const(1),
+            body=Async(body=seq(
+                bump("work"),
+                If(cond=expr(lambda env: env["d"] + 1 < 3, "d",
+                             label="d+1<3"),
+                   then=Call(callee="rec",
+                             args=(binop("+", var("d"), const(1)),))),
+            )),
+        )
+    )
+    rec = MethodDef(name="rec", params=("d",), body=rec_body)
+    main = MethodDef(name="main", params=(),
+                     body=Call(callee="rec", args=(const(0),)))
+    p = Program(methods=(main, rec))
+    p2, report = apply_afe(p)
+    h1, r1 = run_heap(p, {"work": 0})
+    h2, r2 = run_heap(p2, {"work": 0})
+    assert h1["work"] == h2["work"]
+    assert r2.counters.finishes <= r1.counters.finishes

@@ -1,0 +1,70 @@
+"""Regression tests for the trip-count-aware HLO analyzer — the §Roofline
+methodology (cost_analysis counts scan bodies once; we must not)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_analyzer import analyze_hlo
+
+
+def _scan_matmul_hlo(n_iters, m=128, k=256, n=256):
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=n_iters)
+        return out
+
+    return jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    ).compile().as_text()
+
+
+def test_exact_dot_flops():
+    cost = analyze_hlo(_scan_matmul_hlo(1))
+    assert cost.flops == pytest.approx(2 * 128 * 256 * 256, rel=1e-6)
+
+
+@pytest.mark.parametrize("trips", [4, 32])
+def test_trip_count_scaling(trips):
+    base = analyze_hlo(_scan_matmul_hlo(1)).flops
+    scaled = analyze_hlo(_scan_matmul_hlo(trips)).flops
+    assert scaled == pytest.approx(trips * base, rel=1e-6)
+
+
+def test_xla_cost_analysis_undercounts_scans():
+    """The motivating defect: XLA reports identical FLOPs for 1 and 32
+    scan iterations.  If this ever starts failing, XLA fixed it and the
+    analyzer can be simplified."""
+    def f(x, w, n):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=n)
+        return out
+
+    def cost(n):
+        import functools
+
+        return jax.jit(functools.partial(f, n=n)).lower(
+            jax.ShapeDtypeStruct((128, 256), jnp.float32),
+            jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        ).compile().cost_analysis().get("flops", 0)
+
+    assert cost(1) == cost(32)
+
+
+def test_collective_detection():
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[8]{0}}
+
+ENTRY %main () -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %ag = f32[64]{0} all-gather(%p), replica_groups={}, dimensions={0}
+  ROOT %ar = f32[8]{0} all-reduce(%p), to_apply=%add
+}
+"""
+    cost = analyze_hlo(hlo)
+    assert cost.coll_count.get("all-gather") == 1
+    assert cost.coll_bytes.get("all-gather") == 64 * 4
+    assert cost.coll_count.get("all-reduce") == 1

@@ -1,0 +1,113 @@
+"""The paper's Fig. 10/11/12 claims on the eight RTP kernels (scaled
+inputs): correctness under every scheme, finish-count algebra, DCAFE's
+task reduction, and the speedup ordering."""
+
+import pytest
+
+from repro.core import build_kernel, run_scheme
+
+KERNELS = ["NQ", "BFS", "BY", "DR", "DST", "MST", "HL", "FL"]
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+@pytest.mark.parametrize("scheme", ["Serial", "UnOpt", "UnOpt+AFE", "LC",
+                                    "LC+AFE", "DLBC", "DCAFE"])
+def test_scheme_correct(kernel, scheme):
+    k = build_kernel(kernel, "test")
+    r = run_scheme(k, scheme, workers=4)
+    assert r.ok, (kernel, scheme, r.result)
+
+
+@pytest.mark.parametrize("kernel,expect_single_finish", [
+    ("NQ", True),    # paper: 27M → 1
+    ("BFS", True),   # paper: 58k → 1
+    ("DR", False),   # MHBD blocks the pull (paper: 28k → 17k)
+    ("HL", False),   # MHBD blocks the pull
+    ("FL", False),   # finish outside doubly-nested loop survives
+])
+def test_afe_pull_pattern(kernel, expect_single_finish):
+    k = build_kernel(kernel, "test")
+    r = run_scheme(k, "DCAFE", workers=4)
+    assert r.ok
+    if expect_single_finish:
+        assert r.finishes == 1, (kernel, r.finishes)
+    else:
+        assert r.finishes > 1, (kernel, r.finishes)
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_dcafe_reduces_tasks_and_time(kernel):
+    k = build_kernel(kernel, "test")
+    unopt = run_scheme(k, "UnOpt", workers=8)
+    dcafe = run_scheme(k, "DCAFE", workers=8)
+    assert dcafe.ok and unopt.ok
+    assert dcafe.asyncs <= unopt.asyncs, kernel
+    assert dcafe.finishes <= unopt.finishes, kernel
+    # Fig. 11: DCAFE at least matches LC/UnOpt performance on every kernel
+    # at this scale (it strictly wins on the task-explosive ones).
+    assert dcafe.time <= unopt.time * 1.10, kernel
+
+
+def test_nq_task_explosion_ratio():
+    """The headline: NQ asyncs drop by >5× and finishes collapse to 1."""
+    k = build_kernel("NQ", "test")
+    unopt = run_scheme(k, "UnOpt", workers=8)
+    dcafe = run_scheme(k, "DCAFE", workers=8)
+    assert dcafe.finishes == 1
+    assert unopt.asyncs / max(1, dcafe.asyncs) > 5.0
+    assert unopt.finishes > 100
+
+
+def test_speedup_grows_with_workers():
+    """Fig. 11 trend: DCAFE's advantage over LC grows with workers (at
+    1 worker LC spawns one chunk per loop, so both schemes are near-serial
+    — the paper's observation that low-core gains are insignificant)."""
+    k = build_kernel("NQ", "test")
+    speedups = []
+    for w in (1, 4, 16):
+        u = run_scheme(k, "LC", workers=w)
+        d = run_scheme(k, "DCAFE", workers=w)
+        speedups.append(u.time / d.time)
+    assert speedups[-1] > speedups[0]
+
+
+def test_energy_tracks_time():
+    """Fig. 13: DCAFE consumes less simulated energy than LC on the
+    task-explosive kernels."""
+    for kernel in ("NQ", "BFS", "HL"):
+        k = build_kernel(kernel, "test")
+        lc = run_scheme(k, "LC", workers=8)
+        dc = run_scheme(k, "DCAFE", workers=8)
+        assert dc.energy <= lc.energy, kernel
+
+
+def test_dlbc_design_variants_preserve_semantics():
+    """Paper §6 alternatives (check-every-k, min-parallel) stay correct."""
+    from repro.core.afe import apply_afe
+    from repro.core.dlbc import apply_dlbc
+    from repro.core.runtime import run_program
+
+    for kernel in ("NQ", "HL"):
+        k = build_kernel(kernel, "test")
+        afe_p, _ = apply_afe(k.program)
+        for kw in ({}, dict(serial_check_every=3), dict(min_parallel=True)):
+            p = apply_dlbc(afe_p, **kw)
+            r = run_program(p, n_workers=4, heap=k.fresh_heap())
+            got = k.extract(r.heap)
+            want = {kk: v for kk, v in k.expected().items()
+                    if kk in k.result_keys}
+            assert r.ok and got == want, (kernel, kw)
+
+
+def test_dlbc_min_parallel_spawns_more():
+    """Paper §6(c): min-parallel 'may end up creating more tasks'."""
+    from repro.core.afe import apply_afe
+    from repro.core.dlbc import apply_dlbc
+    from repro.core.runtime import run_program
+
+    k = build_kernel("NQ", "test")
+    afe_p, _ = apply_afe(k.program)
+    base = run_program(apply_dlbc(afe_p), n_workers=8, heap=k.fresh_heap())
+    minp = run_program(apply_dlbc(afe_p, min_parallel=True), n_workers=8,
+                       heap=k.fresh_heap())
+    assert minp.counters.asyncs > base.counters.asyncs

@@ -1,0 +1,107 @@
+"""End-to-end behaviour: the quickstart ladder, a short real training run
+with loss decrease, the serving batcher, and the dry-run single-cell path
+(in-process, small mesh via subprocess in test_distributed.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_kernel, run_scheme
+
+
+def test_quickstart_ladder_end_to_end():
+    k = build_kernel("NQ", "test")
+    rows = {s: run_scheme(k, s, workers=8)
+            for s in ("UnOpt", "LC", "DLBC", "DCAFE")}
+    assert all(r.ok for r in rows.values())
+    assert rows["DCAFE"].time < rows["UnOpt"].time
+    assert rows["DCAFE"].finishes == 1
+
+
+def test_training_loss_decreases():
+    from repro.configs.base import ModelConfig, ShapeConfig
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_step import StepConfig
+    from repro.train.trainer import TrainerConfig, run_training
+    import tempfile, shutil
+
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=256)
+    shape = ShapeConfig("t", 64, 8, "train", microbatches=2)
+    d = tempfile.mkdtemp()
+    try:
+        rep = run_training(
+            cfg, shape,
+            TrainerConfig(steps=30, ckpt_every=100, ckpt_dir=d),
+            StepConfig(q_chunk=32, k_chunk=32),
+            AdamWConfig(lr=1e-3, warmup_steps=5))
+        assert rep.completed == 30
+        assert rep.losses[-1] < rep.losses[0]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_serving_batcher_dlbc_beats_lc():
+    from repro.configs.base import ModelConfig
+    from repro.models import model as MDL
+    from repro.serve.batcher import ContinuousBatcher, Request
+
+    cfg = ModelConfig(name="serve", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=256)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def reqs():
+        return [Request(rid=i, prompt=[1, 2], max_new=int(rng.integers(2, 16)),
+                        arrive_step=int(rng.integers(0, 10)))
+                for i in range(16)]
+
+    rng = np.random.default_rng(0)
+    lc = ContinuousBatcher(cfg, params, n_slots=4, cache_len=32,
+                           policy="lc").run(reqs())
+    rng = np.random.default_rng(0)
+    dl = ContinuousBatcher(cfg, params, n_slots=4, cache_len=32,
+                           policy="dlbc").run(reqs())
+    assert dl.utilization >= lc.utilization
+    assert np.mean(dl.latencies) <= np.mean(lc.latencies)
+
+
+def test_dryrun_artifacts_complete():
+    """Every (arch × applicable shape × mesh) cell has an OK artifact —
+    the multi-pod dry-run deliverable (produced by repro.launch.dryrun)."""
+    import json
+    from pathlib import Path
+
+    from repro.configs import all_cells
+
+    d = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+    if not d.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    missing, bad = [], []
+    for cell in all_cells():
+        for mesh in ("16x16", "2x16x16"):
+            tag = f"{mesh}_{cell['arch']}_{cell['shape']}_afe_masked"
+            f = d / f"{tag}.json"
+            if not f.exists():
+                missing.append(tag)
+                continue
+            rec = json.loads(f.read_text())
+            expected = "ok" if cell["applicable"] else "skipped"
+            if rec["status"] != expected:
+                bad.append((tag, rec["status"]))
+            # HBM fit is an analysis outcome, not a compile gate: the
+            # known over-budget cells are documented in EXPERIMENTS.md
+            # §Dry-run with causes and next levers (PP for llama-90b
+            # train; chunked prefill for MoE prefill dispatch buffers).
+            known_over = {
+                ("llama-3.2-vision-90b", "train_4k"),
+                ("mixtral-8x7b", "train_4k"),
+                ("mixtral-8x7b", "prefill_32k"),
+                ("granite-moe-1b-a400m", "prefill_32k"),
+            }
+            if rec["status"] == "ok" and not rec["fits_hbm"] and \
+                    (cell["arch"], cell["shape"]) not in known_over:
+                bad.append((tag, "undocumented over-HBM"))
+    assert not missing, f"missing cells: {missing[:10]}"
+    assert not bad, f"bad cells: {bad[:10]}"
