@@ -10,7 +10,7 @@ from repro.configs.base import ModelConfig
 from repro.models import model as MDL
 from repro.serve.batcher import ContinuousBatcher, Request
 
-from .common import save, table
+from .common import report
 
 
 def run(n_requests: int = 32, slots: int = 4):
@@ -39,11 +39,10 @@ def run(n_requests: int = 32, slots: int = 4):
                             mean_latency=float(np.mean(st.latencies)),
                             p99_latency=float(np.percentile(st.latencies,
                                                             99))))
-    print("== Serving: DLBC continuous batching vs LC fixed batching")
-    table(rows, ["policy", "steps", "util", "mean_lat", "p99_lat",
-                 "queue_wait"])
-    save("batcher", records)
-    return records
+    return report("Serving: DLBC continuous batching vs LC fixed batching",
+                  rows, ["policy", "steps", "util", "mean_lat", "p99_lat",
+                         "queue_wait"],
+                  "batcher", records)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ from repro.core.afe import apply_afe
 from repro.core.dlbc import apply_dlbc
 from repro.core.runtime import run_program
 
-from .common import save, table
+from .common import report
 
 VARIANTS = {
     "DCAFE (paper)": {},
@@ -48,13 +48,13 @@ def run(scale: str = "bench", workers: int = 16):
                                 asyncs=r.counters.asyncs,
                                 finishes=r.counters.finishes,
                                 time=r.time, ok=ok))
-    print(f"== Paper §6 design-choice study (workers={workers}); "
-          "speedup relative to the paper's DCAFE")
-    table(rows, ["kernel", "variant", "#async", "#finish", "time",
-                 "vs_paper", "correct"])
+    report(f"Paper §6 design-choice study (workers={workers}); "
+           "speedup relative to the paper's DCAFE",
+           rows, ["kernel", "variant", "#async", "#finish", "time",
+                  "vs_paper", "correct"],
+           "design_choices", records)
     print("(paper §6: per-iteration re-check and full serialization won; "
           "min-parallel 'creates more tasks than required')\n")
-    save("design_choices", records)
     return records
 
 

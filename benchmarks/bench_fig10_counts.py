@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from repro.core import build_kernel, run_scheme
 
-from .common import save, table
+from .common import report
 
 KERNELS = ["BFS", "BY", "DR", "DST", "MST", "NQ", "HL", "FL"]
 SCHEMES = ["UnOpt", "LC", "DCAFE"]
@@ -24,10 +24,10 @@ def run(scale: str = "bench", workers: int = 8):
             rows.append([kernel, scheme, r.finishes, r.asyncs,
                          "ok" if r.ok else "FAIL"])
             records.append(r.row())
-    print(f"== Fig. 10: dynamic task/finish counts "
-          f"(workers={workers}, scale={scale})")
-    table(rows, ["kernel", "scheme", "#finish", "#async", "correct"])
-    save("fig10_counts", records)
+    report(f"Fig. 10: dynamic task/finish counts "
+           f"(workers={workers}, scale={scale})",
+           rows, ["kernel", "scheme", "#finish", "#async", "correct"],
+           "fig10_counts", records)
     # headline assertions (paper: NQ/BFS collapse to 1 finish under DCAFE)
     by = {(r["kernel"], r["scheme"]): r for r in records}
     assert by[("NQ", "DCAFE")]["finishes"] == 1

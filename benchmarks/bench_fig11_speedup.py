@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from repro.core import build_kernel, run_scheme
 
-from .common import save, table
+from .common import report
 
 KERNELS = ["BFS", "BY", "DR", "DST", "MST", "NQ", "HL", "FL"]
 WORKERS = [1, 2, 4, 8, 16, 32, 64]
@@ -33,14 +33,14 @@ def run(scale: str = "bench"):
                                 lc_time=lc.time, dcafe_time=dc.time,
                                 speedup=sp))
         rows.append(row)
-    print("== Fig. 11: speedup = time(LC)/time(DCAFE) vs workers")
-    table(rows, ["kernel"] + [f"W{w}" for w in WORKERS])
     gm = {w: geomean([r["speedup"] for r in records if r["workers"] == w])
           for w in WORKERS}
+    report("Fig. 11: speedup = time(LC)/time(DCAFE) vs workers",
+           rows, ["kernel"] + [f"W{w}" for w in WORKERS],
+           "fig11_speedup", dict(records=records, geomean=gm))
     print("geomean speedup by workers:",
           {w: round(v, 2) for w, v in gm.items()})
     print("(paper: geomean 5.75x @16-core Intel, 4.16x @64-core AMD)\n")
-    save("fig11_speedup", dict(records=records, geomean=gm))
     return records
 
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from repro.core import build_kernel, run_scheme
 
-from .common import save, table
+from .common import report
 
 KERNELS = ["BFS", "BY", "DR", "DST", "MST", "NQ", "HL", "FL"]
 SCHEMES = ["Serial", "UnOpt", "UnOpt+AFE", "LC", "LC+AFE", "DLBC", "DCAFE"]
@@ -25,8 +25,8 @@ def run(scale: str = "bench", workers: int = 16):
             records.append(dict(kernel=kernel, scheme=scheme, time=r.time,
                                 vs_unopt=ratio, ok=r.ok))
         rows.append(row)
-    print(f"== Fig. 12: time(UnOpt)/time(scheme), workers={workers}")
-    table(rows, ["kernel"] + SCHEMES)
+    report(f"Fig. 12: time(UnOpt)/time(scheme), workers={workers}",
+           rows, ["kernel"] + SCHEMES, "fig12_schemes", records)
     import math
 
     for scheme in ("LC", "LC+AFE", "DLBC", "DCAFE"):
@@ -36,7 +36,6 @@ def run(scale: str = "bench", workers: int = 16):
         print(f"geomean {scheme} vs UnOpt: {gm:.2f}x")
     print("(paper @16-core Intel: LC 2.2x, LC+AFE 1.31x, DLBC 12.28x, "
           "DCAFE 12.64x)\n")
-    save("fig12_schemes", records)
     return records
 
 

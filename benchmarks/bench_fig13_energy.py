@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from repro.core import build_kernel, run_scheme
 
-from .common import save, table
+from .common import report
 
 KERNELS = ["BFS", "BY", "DR", "DST", "MST", "NQ", "HL", "FL"]
 
@@ -23,15 +23,15 @@ def run(scale: str = "bench", workers: int = 16):
                      f"{dc.energy / lc.energy:.3f}"])
         records.append(dict(kernel=kernel, unopt=un.energy, lc=lc.energy,
                             dcafe=dc.energy))
-    print(f"== Fig. 13: energy normalised to UnOpt (workers={workers})")
-    table(rows, ["kernel", "LC/UnOpt", "DCAFE/UnOpt", "DCAFE/LC"])
+    report(f"Fig. 13: energy normalised to UnOpt (workers={workers})",
+           rows, ["kernel", "LC/UnOpt", "DCAFE/UnOpt", "DCAFE/LC"],
+           "fig13_energy", records)
     import math
 
     ratios = [r["dcafe"] / r["lc"] for r in records]
     gm = math.exp(sum(math.log(x) for x in ratios) / len(ratios))
     print(f"geomean DCAFE/LC energy: {gm:.3f} "
           f"(paper: 0.288 ⇒ 71.2% less)\n")
-    save("fig13_energy", records)
     return records
 
 

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import moe as MOE
 
-from .common import save, table
+from .common import report
 
 
 def skewed_tokens(key, T, d, n_clusters, spread):
@@ -40,9 +40,9 @@ def run():
                          f"{(drop['lc'] - drop['dlbc']):+.3f}"])
             records.append(dict(capacity_factor=cf, clusters=skew_clusters,
                                 lc_drop=drop["lc"], dlbc_drop=drop["dlbc"]))
-    print("== MoE dispatch: dropped-token fraction (lower is better)")
-    table(rows, ["cap_factor", "skew_clusters", "LC", "DLBC", "delta"])
-    save("moe_dispatch", records)
+    report("MoE dispatch: dropped-token fraction (lower is better)",
+           rows, ["cap_factor", "skew_clusters", "LC", "DLBC", "delta"],
+           "moe_dispatch", records)
     return records
 
 

@@ -7,7 +7,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from .common import save, table
+from .common import report
 
 DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
 
@@ -39,12 +39,12 @@ def run(mesh: str = "16x16"):
             f"{rec['hbm_per_device_gb']:.1f}",
             "yes" if rec["fits_hbm"] else "NO",
         ])
-    print(f"== Roofline terms per cell (mesh {mesh}; seconds/step; "
-          "v5e 197TF/s bf16, 819GB/s HBM, 50GB/s ICI)")
-    table(rows, ["arch", "shape", "compute_s", "memory_s", "collective_s",
-                 "dominant", "roofline_frac", "useful_flops",
-                 "hbm_GB", "fits"])
-    save(f"roofline_{mesh}", cells)
+    report(f"Roofline terms per cell (mesh {mesh}; seconds/step; "
+           "v5e 197TF/s bf16, 819GB/s HBM, 50GB/s ICI)",
+           rows, ["arch", "shape", "compute_s", "memory_s", "collective_s",
+                  "dominant", "roofline_frac", "useful_flops",
+                  "hbm_GB", "fits"],
+           f"roofline_{mesh}", cells)
     return cells
 
 

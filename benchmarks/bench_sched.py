@@ -1,0 +1,100 @@
+"""Policy comparison on the host thread pool: Serial vs LC vs DLBC vs
+DLBC+stealing under uniform and skewed item costs, plus the DCAFE
+finish-scope join-count win.
+
+LC spawns ``n_workers`` static chunks and the caller only joins; DLBC
+reads the idle count, keeps the smallest chunk on the caller (so
+``idle + 1`` workers execute), and re-probes in the serial fallback —
+so DLBC throughput must be ≥ LC, with the gap widening when item costs
+are skewed and a static split leaves workers idle.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.sched import ThreadExecutor, WorkStealingExecutor
+
+from .common import report
+
+
+def _sleep_work(ms: float):
+    # time.sleep releases the GIL → real host-thread parallelism
+    time.sleep(ms / 1e3)
+
+
+def make_costs(n: int, dist: str):
+    """Per-item cost in ms.  'skewed': a heavy head (10×) — the worst case
+    for contiguous static chunks, which hand one worker the whole hump."""
+    if dist == "uniform":
+        return [2.0] * n
+    assert dist == "skewed"
+    return [20.0 if i < n // 8 else 1.0 for i in range(n)]
+
+
+def _run_once(policy: str, costs, workers: int):
+    cls = WorkStealingExecutor if policy == "dlbc-steal" else ThreadExecutor
+    pol = "dlbc" if policy == "dlbc-steal" else policy
+    ex = cls(n_workers=workers)
+    try:
+        t0 = time.perf_counter()
+        ex.run_loop(costs, _sleep_work, policy=pol)
+        dt = time.perf_counter() - t0
+        return dt, ex.telemetry
+    finally:
+        ex.shutdown()
+
+
+def run(n_items: int = 64, workers: int = 4, repeats: int = 3):
+    rows, records = [], []
+    best = {}
+    for dist in ("uniform", "skewed"):
+        costs = make_costs(n_items, dist)
+        for policy in ("serial", "lc", "dlbc", "dlbc-steal"):
+            runs = [_run_once(policy, costs, workers) for _ in range(repeats)]
+            dt, tel = min(runs, key=lambda r: r[0])
+            thr = n_items / dt
+            best[(dist, policy)] = thr
+            s = tel.summary()
+            rows.append([dist, policy, f"{dt * 1e3:.1f}", f"{thr:.0f}",
+                         s["spawns"], s["joins"], s["serial_items"],
+                         s["steals"], f"{s['p50_ms']:.2f}",
+                         f"{s['p99_ms']:.2f}"])
+            records.append(dict(dist=dist, policy=policy, wall_s=dt,
+                                items_per_s=thr, **s))
+
+    # DCAFE: many loops, one escaped join (host-side finish elimination)
+    ex = ThreadExecutor(n_workers=workers)
+    try:
+        costs = make_costs(n_items // 4, "uniform")
+        t0 = time.perf_counter()
+        with ex.finish() as scope:
+            for _ in range(4):
+                ex.run_loop(costs, _sleep_work, policy="dcafe", scope=scope)
+        dt = time.perf_counter() - t0
+        s = ex.telemetry.summary()
+        rows.append(["4 loops", "dcafe", f"{dt * 1e3:.1f}",
+                     f"{n_items / dt:.0f}", s["spawns"], s["joins"],
+                     s["serial_items"], s["steals"], f"{s['p50_ms']:.2f}",
+                     f"{s['p99_ms']:.2f}"])
+        records.append(dict(dist="4loops", policy="dcafe", wall_s=dt,
+                            items_per_s=n_items / dt, **s))
+    finally:
+        ex.shutdown()
+
+    out = report(
+        f"Host-pool policy comparison ({n_items} items, {workers} workers, "
+        f"best of {repeats})",
+        rows,
+        ["items", "policy", "wall_ms", "items/s", "spawns", "joins",
+         "serial", "steals", "p50_ms", "p99_ms"],
+        "sched", records)
+    ok = best[("skewed", "dlbc")] >= best[("skewed", "lc")]
+    print(f"DLBC >= LC under skewed costs: {ok} "
+          f"({best[('skewed', 'dlbc')]:.0f} vs {best[('skewed', 'lc')]:.0f} "
+          f"items/s)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

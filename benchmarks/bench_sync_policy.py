@@ -12,7 +12,7 @@ import subprocess
 import sys
 import textwrap
 
-from .common import save, table
+from .common import report
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -90,12 +90,12 @@ def run():
             int(r["coll_count"].get("reduce-scatter", 0)),
             int(r["coll_count"].get("all-gather", 0)),
         ])
-    print("== Sync-policy ladder (granite smoke, 4x2 mesh, 4 microbatches):"
-          " collectives per step")
-    table(rows, ["policy", "#coll", "MB", "all-reduce", "reduce-scatter",
-                 "all-gather"])
+    report("Sync-policy ladder (granite smoke, 4x2 mesh, 4 microbatches):"
+           " collectives per step",
+           rows, ["policy", "#coll", "MB", "all-reduce", "reduce-scatter",
+                  "all-gather"],
+           "sync_policy", result)
     print("(the paper's dynamic-#finish table, as compiled collectives)\n")
-    save("sync_policy", result)
     return result
 
 

@@ -27,6 +27,16 @@ def table(rows, headers):
     print()
 
 
+def report(title, rows, headers, name, records):
+    """Print a titled results table and persist the records as JSON —
+    the one emit path shared by every benchmark."""
+    print(f"== {title}")
+    table(rows, headers)
+    path = save(name, records)
+    print(f"[saved {path}]")
+    return records
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.time()

@@ -26,6 +26,12 @@ When AFE has already removed the enclosing finish (DCAFE), the chunked and
 parent blocks are emitted WITHOUT a finish — the spawned tasks escape to
 the single outer join, which is precisely how DCAFE reaches "1 finish,
 ~1000× fewer tasks" on NQ-style kernels.
+
+The chunk arithmetic itself (totWorkers / eqChunk / chunkEnd / rem / kx)
+is NOT re-derived here: the emitted expressions call the canonical
+``fig6_*`` helpers of :mod:`repro.sched.policy`, the single owner of the
+remainder-spread recurrence shared with the host pools and the serving
+batcher.
 """
 
 from __future__ import annotations
@@ -40,6 +46,9 @@ from .ir import (
     fresh, idle_workers, rebuild, seq, var, walk,
 )
 from .lc import ParallelLoop, chunkable, match_parallel_loop, split_phases
+from ..sched.policy import (
+    fig6_chunk_end, fig6_eq, fig6_next, fig6_rem0, fig6_tot,
+)
 
 
 def _phase_guard(phase_var: str, p: int, body: Stmt) -> Stmt:
@@ -112,8 +121,8 @@ def dlbc_loop(pl: ParallelLoop, *, with_finish: bool,
             Assign(
                 target=kx,
                 value=expr(
-                    lambda env, _ii=ii, _e=eqc, _r=rem, _t=tot: env[_ii]
-                    + env[_e] + env[_r] // env[_t],
+                    lambda env, _ii=ii, _e=eqc, _r=rem, _t=tot: fig6_next(
+                        env[_ii], env[_e], env[_r], env[_t]),
                     ii, eqc, rem, tot,
                     label=f"{ii}+{eqc}+{rem}/{tot}",
                 ),
@@ -144,16 +153,22 @@ def dlbc_loop(pl: ParallelLoop, *, with_finish: bool,
         par_body = Finish(body=par_body)
 
     parallel_arm = seq(
-        Assign(target=tot, value=binop("+", var(workers), const(1)),
+        Assign(target=tot,
+               value=expr(lambda env, _w=workers: fig6_tot(env[_w]),
+                          workers, label=f"{workers}+1"),
                declare_local=True),
         Assign(target=actualn, value=binop("-", hi, var(ii)),
                declare_local=True),
-        Assign(target=eqc, value=binop("//", var(actualn), var(tot)),
+        Assign(target=eqc,
+               value=expr(
+                   lambda env, _a=actualn, _t=tot: fig6_eq(env[_a], env[_t]),
+                   actualn, tot, label=f"{actualn}//{tot}"),
                declare_local=True),
         Assign(
             target=chunk_end,
             value=expr(
-                lambda env, _ii=ii, _a=actualn, _e=eqc: env[_ii] + env[_a] - env[_e],
+                lambda env, _ii=ii, _a=actualn, _e=eqc: fig6_chunk_end(
+                    env[_ii], env[_a], env[_e]),
                 ii, actualn, eqc, label=f"{ii}+{actualn}-{eqc}",
             ),
             declare_local=True,
@@ -161,8 +176,8 @@ def dlbc_loop(pl: ParallelLoop, *, with_finish: bool,
         Assign(
             target=rem,
             value=expr(
-                lambda env, _a=actualn, _t=tot, _w=workers: env[_a] % env[_t]
-                + env[_w],
+                lambda env, _a=actualn, _t=tot, _w=workers: fig6_rem0(
+                    env[_a], env[_t], env[_w]),
                 actualn, tot, workers, label=f"{actualn}%{tot}+{workers}",
             ),
             declare_local=True,

@@ -22,6 +22,7 @@ from .ir import (
     Seq, Skip, Stmt, binop, children, const, expr, fresh, n_threads, rebuild,
     seq, var, walk,
 )
+from ..sched.policy import static_chunk_size
 
 
 # ---------------------------------------------------------------------------
@@ -137,8 +138,8 @@ def lc_chunked_loop(pl: ParallelLoop) -> Stmt:
         Assign(
             target=csize,
             value=expr(
-                lambda env, _t=total, _n=nchunks: max(
-                    1, -(-_t.fn(env) // env[_n])
+                lambda env, _t=total, _n=nchunks: static_chunk_size(
+                    _t.fn(env), env[_n]
                 ),
                 *(total.reads | frozenset({nchunks})),
                 label=f"ceil(({total.label})/{nchunks})",

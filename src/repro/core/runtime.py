@@ -38,6 +38,8 @@ from .ir import (
     ForLoop, If, MethodDef, NewClock, Program, Seq, Skip, Stmt, Throw,
     TryCatch, While,
 )
+from ..sched.capacity import SimWorkerCapacity
+from ..sched.telemetry import SchedCounters
 
 # ---------------------------------------------------------------------------
 # Cost / power model
@@ -58,13 +60,27 @@ class CostModel:
     energy_per_finish: float = 0.5
 
 
-@dataclass
-class Counters:
-    asyncs: int = 0
-    finishes: int = 0
-    barriers: int = 0
-    steps: int = 0
-    work: float = 0.0
+class Counters(SchedCounters):
+    """Fig. 10 counter names over the shared scheduling counters
+    (:class:`repro.sched.telemetry.SchedCounters`): ``asyncs`` ≡ spawns,
+    ``finishes`` ≡ joins — one vocabulary across the simulator, the host
+    pools, and the serving batcher."""
+
+    @property
+    def asyncs(self) -> int:
+        return self.spawns
+
+    @asyncs.setter
+    def asyncs(self, v: int):
+        self.spawns = v
+
+    @property
+    def finishes(self) -> int:
+        return self.joins
+
+    @finishes.setter
+    def finishes(self, v: int):
+        self.joins = v
 
     def as_dict(self):
         return dict(asyncs=self.asyncs, finishes=self.finishes,
@@ -361,6 +377,7 @@ class Scheduler:
         self.events: list = []  # (time, seq, task)
         self._seq = itertools.count()
         self.idle: set = set(range(n_workers))
+        self.capacity = SimWorkerCapacity(self)  # repro.sched view of idleness
         self.pending: List[Task] = []  # FIFO task pool
         self.busy_time = [0.0] * n_workers
         self.now = 0.0
@@ -371,7 +388,10 @@ class Scheduler:
     # -- queries --------------------------------------------------------------
 
     def idle_count(self) -> int:
-        return len(self.idle)
+        # ``Runtime.retIdleWorkers()`` — routed through the shared
+        # CapacityProvider so the simulator reads idleness the same way
+        # the host pools and the batcher do (benign race preserved).
+        return self.capacity.idle()
 
     # -- scheduling primitives --------------------------------------------------
 

@@ -76,6 +76,13 @@ class SchemeRun:
                     energy=round(self.energy, 2), asyncs=self.asyncs,
                     finishes=self.finishes, ok=self.ok)
 
+    def sched_summary(self) -> dict:
+        """The run's Fig. 10 counts in the shared ``repro.sched`` counter
+        vocabulary (spawns/joins), comparable across the simulator, the
+        host pools, and the serving batcher."""
+        return dict(spawns=self.asyncs, joins=self.finishes,
+                    barriers=self.barriers)
+
 
 def run_scheme(kernel: RTPKernel, scheme: str, workers: int = 4,
                cost_model: Optional[CostModel] = None,

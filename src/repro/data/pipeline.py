@@ -18,7 +18,8 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from .pool import DLBCPool, global_pool
+from ..sched.executors import ThreadExecutor
+from .pool import global_pool
 
 
 def _shard_tokens(seed: int, step: int, shard: int, rows: int, seq: int,
@@ -42,7 +43,7 @@ class DataConfig:
 
 
 class SyntheticPipeline:
-    def __init__(self, cfg: DataConfig, pool: Optional[DLBCPool] = None):
+    def __init__(self, cfg: DataConfig, pool: Optional[ThreadExecutor] = None):
         self.cfg = cfg
         self.pool = pool or global_pool()
         assert cfg.global_batch % cfg.n_shards == 0

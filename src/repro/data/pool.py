@@ -1,124 +1,32 @@
-"""DLBC worker pool — the paper's runtime policy on real host threads.
+"""Back-compat host worker pool — now a thin wrapper over ``repro.sched``.
 
-This is where DCAFE applies *literally* in a TPU stack: host-side work
-(data shard preparation, checkpoint I/O, request batching) is CPU
-task-parallelism.  The pool schedules a loop of ``n`` work items with the
-paper's DLBC policy:
-
-* read the idle-worker count (no lock — the paper's benign race);
-* if idle workers exist, split the remaining items into
-  ``eqChunk = remaining // (idle+1)`` chunks with the remainder spread
-  one-per-chunk from the front and the **smallest chunk kept by the
-  calling thread** (Fig. 6 lines 7–16);
-* if none are idle, execute items serially, re-checking after each item
-  and re-entering the parallel path when a worker frees up and ≥2 items
-  remain (the serial block, Fig. 6 lines 26–31).
-
-Counters mirror Fig. 10: ``tasks_spawned`` (async analogue) and
-``joins`` (finish analogue) are exposed for the benchmarks.
+The DLBC policy (idle-count read, Fig. 6 remainder-spread chunking,
+re-probing serial fallback) lives in :mod:`repro.sched.policy`; the
+thread pool itself is :class:`repro.sched.executors.ThreadExecutor`.
+This module only keeps the historical ``DLBCPool`` name and its
+``stats`` field shape (``tasks_spawned``/``joins``/``serial_items``/
+``parallel_items``) alive for existing callers.
 """
 
 from __future__ import annotations
 
-import queue
-import threading
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Optional
+
+from ..sched.executors import ThreadExecutor
+from ..sched.telemetry import SchedTelemetry
+
+# Old name for the stats record: SchedTelemetry carries the same fields
+# (``tasks_spawned`` is an alias of ``spawns``).
+PoolStats = SchedTelemetry
 
 
-@dataclass
-class PoolStats:
-    tasks_spawned: int = 0
-    joins: int = 0
-    serial_items: int = 0
-    parallel_items: int = 0
+class DLBCPool(ThreadExecutor):
+    """Deprecated alias of :class:`repro.sched.executors.ThreadExecutor`
+    (DLBC is that executor's default policy)."""
 
-
-class DLBCPool:
-    def __init__(self, n_workers: int = 4):
-        self.n_workers = n_workers
-        self._q: "queue.Queue" = queue.Queue()
-        self._idle = n_workers  # racy read by design (paper §3.2.1)
-        self._idle_lock = threading.Lock()
-        self.stats = PoolStats()
-        self._threads = [
-            threading.Thread(target=self._worker, daemon=True)
-            for _ in range(n_workers)
-        ]
-        for t in self._threads:
-            t.start()
-
-    # -- worker loop ---------------------------------------------------------
-
-    def _worker(self):
-        while True:
-            item = self._q.get()
-            if item is None:
-                return
-            fn, done = item
-            with self._idle_lock:
-                self._idle -= 1
-            try:
-                fn()
-            finally:
-                with self._idle_lock:
-                    self._idle += 1
-                done.set()
-
-    def idle_workers(self) -> int:
-        return self._idle  # intentionally unlocked read
-
-    def shutdown(self):
-        for _ in self._threads:
-            self._q.put(None)
-
-    # -- DLBC loop execution ---------------------------------------------------
-
-    def run_loop(self, items: List, fn: Callable) -> None:
-        """Execute ``fn(item)`` for every item under the DLBC policy."""
-        i = 0
-        n = len(items)
-        while True:
-            workers = self.idle_workers()
-            if workers > 0:
-                tot = workers + 1
-                actualn = n - i
-                eq = actualn // tot
-                chunk_end = i + actualn - eq
-                rem = actualn % tot + workers
-                events = []
-                while i < chunk_end:
-                    kx = i + eq + rem // tot
-                    ni, rem, i = i, rem - 1, kx
-
-                    def task(lo=ni, hi=kx):
-                        for j in range(lo, hi):
-                            fn(items[j])
-
-                    ev = threading.Event()
-                    self._q.put((task, ev))
-                    events.append(ev)
-                    self.stats.tasks_spawned += 1
-                    self.stats.parallel_items += kx - ni
-                # parent block: the smallest chunk
-                for j in range(chunk_end, n):
-                    fn(items[j])
-                    self.stats.parallel_items += 1
-                for ev in events:
-                    ev.wait()
-                self.stats.joins += 1
-                return
-            # serial block with per-item re-check
-            resumed = False
-            while i < n:
-                fn(items[i])
-                self.stats.serial_items += 1
-                i += 1
-                if self.idle_workers() > 0 and (n - i) >= 2:
-                    resumed = True
-                    break
-            if not resumed:
-                return
+    @property
+    def stats(self) -> SchedTelemetry:
+        return self.telemetry
 
 
 _GLOBAL: Optional[DLBCPool] = None

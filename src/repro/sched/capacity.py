@@ -1,0 +1,90 @@
+"""CapacityProvider — what "idle workers" means on each execution surface.
+
+The paper's ``Runtime.retIdleWorkers()`` is an *unsynchronised* read of
+scheduler state (§3.2.1): two tasks sampling at the same instant may see
+the same count, a benign race the policy tolerates by construction.
+Every provider here preserves that contract — ``idle()`` is a plain read,
+never a lock acquisition.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class CapacityProvider(Protocol):
+    """Idle/total worker counts for one execution substrate."""
+
+    def idle(self) -> int:
+        """How many workers could take a task right now (racy read)."""
+        ...
+
+    def total(self) -> int:
+        """Substrate size: threads, simulated workers, or device slots."""
+        ...
+
+
+@dataclass
+class FixedCapacity:
+    """A constant capacity — unit tests and cost modelling."""
+
+    idle_n: int
+    total_n: int
+
+    def idle(self) -> int:
+        return self.idle_n
+
+    def total(self) -> int:
+        return self.total_n
+
+
+class SimWorkerCapacity:
+    """Simulated workers of the discrete-event runtime
+    (:class:`repro.core.runtime.Scheduler`, duck-typed to avoid a
+    sched→core import cycle).  ``idle`` reads the scheduler's idle set at
+    the current simulated instant — the benign race is preserved because
+    same-instant events observe the same set."""
+
+    def __init__(self, sched):
+        self._sched = sched
+
+    def idle(self) -> int:
+        return len(self._sched.idle)
+
+    def total(self) -> int:
+        return self._sched.n_workers
+
+
+class PoolCapacity:
+    """Host thread-pool idleness: an intentionally unlocked read of the
+    executor's idle counter (:class:`repro.sched.executors.ThreadExecutor`)."""
+
+    def __init__(self, executor):
+        self._ex = executor
+
+    def idle(self) -> int:
+        return self._ex._idle  # intentionally unlocked (paper §3.2.1)
+
+    def total(self) -> int:
+        return self._ex.n_workers
+
+
+class SlotCapacity:
+    """Device decode slots of the serving batcher: a slot is idle when no
+    request occupies it."""
+
+    def __init__(self, slots: List[Optional[object]]):
+        self._slots = slots
+
+    def idle(self) -> int:
+        return len(self.idle_indices())
+
+    def idle_indices(self) -> List[int]:
+        """Idle slot indices, lowest first (the Fig. 6 refill priority:
+        oldest queued request → lowest slot)."""
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    def total(self) -> int:
+        return len(self._slots)

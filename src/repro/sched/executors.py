@@ -1,0 +1,298 @@
+"""Executors: substrates that run work under a pluggable SchedPolicy.
+
+* :class:`ThreadExecutor` — host thread pool (FIFO task queue), the
+  generalisation of the old ``repro.data.pool.DLBCPool``.  ``run_loop``
+  is the paper's three-block structure (chunked / parent / serial) with
+  the *policy* deciding which arm to take at each step.
+* :class:`WorkStealingExecutor` — per-worker deques; an idle worker
+  steals from the back of a victim's deque.  Same ``run_loop``.
+* :class:`FinishScope` — DCAFE on the host: spawned chunks escape their
+  per-loop join to one outer scope (one join for many loops).
+* :class:`SlotExecutor` — admission scheduling over fixed device decode
+  slots for the continuous batcher (requests are single tasks; capacity
+  is the idle-slot count).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+
+from .capacity import PoolCapacity, SlotCapacity
+from .policy import SchedPolicy, get_policy
+from .telemetry import SchedTelemetry
+
+
+class FinishScope:
+    """Collects escaped joins (DCAFE): ``with executor.finish() as f:``
+    runs many loops but performs ONE join at scope exit."""
+
+    def __init__(self, telemetry: Optional[SchedTelemetry] = None):
+        self._events: List[threading.Event] = []
+        self.telemetry = telemetry
+
+    def add(self, events: Sequence[threading.Event]):
+        self._events.extend(events)
+
+    def join(self):
+        for ev in self._events:
+            ev.wait()
+        self._events.clear()
+        if self.telemetry is not None:
+            self.telemetry.joins += 1
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.join()
+        return False
+
+
+class ThreadExecutor:
+    """DLBC worker pool — the paper's runtime policy on real host threads.
+
+    Host-side work in a TPU stack (data shard preparation, checkpoint I/O,
+    request batching) is CPU task-parallelism, so DCAFE applies literally:
+    the idle count is read without a lock (the benign race, §3.2.1), the
+    policy decides between the chunked/parent arms and the re-probing
+    serial arm, and telemetry mirrors Fig. 10 (spawns/joins).
+    """
+
+    #: Max items per spawned task; ``None`` = one task per planned chunk.
+    #: The work-stealing variant narrows this so thieves have something
+    #: to steal when cost skew piles up in one chunk.
+    chunk_grain: Optional[int] = None
+
+    def __init__(self, n_workers: int = 4,
+                 telemetry: Optional[SchedTelemetry] = None):
+        self.n_workers = n_workers
+        self._q: "queue.Queue" = queue.Queue()
+        self._idle = n_workers  # racy read by design (paper §3.2.1)
+        self._idle_lock = threading.Lock()
+        self.telemetry = telemetry or SchedTelemetry()
+        self.capacity = PoolCapacity(self)
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True)
+            for _ in range(n_workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- worker loop ---------------------------------------------------------
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, done = item
+            with self._idle_lock:
+                self._idle -= 1
+            try:
+                fn()
+            finally:
+                with self._idle_lock:
+                    self._idle += 1
+                done.set()
+
+    def _submit(self, fn: Callable[[], None]) -> threading.Event:
+        ev = threading.Event()
+        self._q.put((fn, ev))
+        return ev
+
+    def idle_workers(self) -> int:
+        return self._idle  # intentionally unlocked read
+
+    def shutdown(self):
+        for _ in self._threads:
+            self._q.put(None)
+
+    def finish(self) -> FinishScope:
+        """Open a DCAFE finish scope for escaped joins."""
+        return FinishScope(self.telemetry)
+
+    # -- policy-driven loop execution ----------------------------------------
+
+    def run_loop(self, items: Sequence, fn: Callable,
+                 policy: Union[str, SchedPolicy, None] = None,
+                 scope: Optional[FinishScope] = None) -> None:
+        """Execute ``fn(item)`` for every item under the given policy.
+
+        This is the paper's three-block loop: the policy's ``decide``
+        picks the parallel arm (spawn the planned chunks, run the caller
+        chunk here, join — or escape the join into ``scope`` for DCAFE)
+        or the serial arm (one item at a time, re-probing capacity).
+        """
+        policy = get_policy(policy, default="dlbc")
+        t = self.telemetry
+        n = len(items)
+        i = 0
+
+        def run_item(j: int, serial: bool):
+            t0 = time.perf_counter()
+            fn(items[j])
+            t.record_latency(time.perf_counter() - t0)
+            if serial:
+                t.serial_items += 1
+            else:
+                t.parallel_items += 1
+
+        while i < n:
+            decision = policy.decide(i, n, self.capacity)
+            if decision.plan is not None:
+                plan = decision.plan
+                events = []
+                for lo, hi in plan.spawned:
+                    grain = self.chunk_grain or (hi - lo)
+                    for a in range(lo, hi, grain):
+                        b = min(a + grain, hi)
+
+                        def task(a=a, b=b):
+                            for j in range(a, b):
+                                t0 = time.perf_counter()
+                                fn(items[j])
+                                t.record_latency(time.perf_counter() - t0)
+
+                        events.append(self._submit(task))
+                        t.spawns += 1
+                        t.parallel_items += b - a
+                # parent block: the caller's (smallest) chunk
+                for j in range(*plan.caller):
+                    run_item(j, serial=False)
+                if policy.escape_join and scope is not None:
+                    scope.add(events)  # DCAFE: join escapes to the scope
+                else:
+                    for ev in events:
+                        ev.wait()
+                    t.joins += 1
+                return
+            # serial block with periodic capacity re-probe (cadence counts
+            # items processed in THIS block, not the absolute index)
+            resumed = False
+            every = decision.recheck_every
+            done_in_block = 0
+            while i < n:
+                run_item(i, serial=True)
+                i += 1
+                done_in_block += 1
+                if (every > 0 and (done_in_block % every == 0)
+                        and self.capacity.idle() > 0 and (n - i) >= 2):
+                    resumed = True
+                    break
+            if not resumed:
+                return
+
+
+class WorkStealingExecutor(ThreadExecutor):
+    """Per-worker deques with back-end stealing.
+
+    The owner pushes/pops its own deque at the front; an idle worker
+    steals from the *back* of the first non-empty victim deque (classic
+    Arora-Blumofe-Plotkin discipline), so contiguous cost skew spreads
+    across workers even after the chunk plan is committed.  Tasks are
+    per-item (``chunk_grain = 1``): a committed chunk stays stealable.
+    """
+
+    chunk_grain = 1
+
+    def __init__(self, n_workers: int = 4,
+                 telemetry: Optional[SchedTelemetry] = None):
+        self._deques: List[deque] = [deque() for _ in range(n_workers)]
+        self._cv = threading.Condition()
+        self._stop = False
+        self._rr = 0
+        super().__init__(n_workers, telemetry)
+
+    def _worker_index(self) -> int:
+        me = threading.current_thread()
+        return self._threads.index(me)
+
+    def _worker(self):
+        w = self._worker_index()
+        while True:
+            item = None
+            with self._cv:
+                while True:
+                    if self._deques[w]:
+                        item = self._deques[w].popleft()
+                        break
+                    stolen = False
+                    for v in range(self.n_workers):
+                        if v != w and self._deques[v]:
+                            item = self._deques[v].pop()  # steal from back
+                            self.telemetry.steals += 1
+                            stolen = True
+                            break
+                    if stolen:
+                        break
+                    # Drain semantics matching ThreadExecutor's sentinel
+                    # queue: stop only once every deque is empty, so
+                    # already-submitted tasks still run and their done
+                    # events fire (a FinishScope.join never hangs).
+                    if self._stop:
+                        return
+                    self._cv.wait(timeout=0.1)
+                self._idle -= 1
+            fn, done = item
+            try:
+                fn()
+            finally:
+                with self._cv:
+                    self._idle += 1
+                done.set()
+
+    def _submit(self, fn: Callable[[], None]) -> threading.Event:
+        ev = threading.Event()
+        with self._cv:
+            self._deques[self._rr % self.n_workers].append((fn, ev))
+            self._rr += 1
+            self._cv.notify_all()
+        return ev
+
+    def shutdown(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+
+
+class SlotExecutor:
+    """Admission scheduling over fixed device slots (continuous batching).
+
+    A queued request is one task; an idle slot is an idle worker.  The
+    policy's ``admit`` applies the paper's spawn rule: DLBC admits into
+    every idle slot at every decode step (per-iteration re-check), LC
+    waits for a full batch of free slots (static chunking of requests).
+    Refills are FIFO with oldest request → lowest slot index — the
+    remainder-spread priority of Fig. 6.
+    """
+
+    def __init__(self, n_slots: int,
+                 policy: Union[str, SchedPolicy, None] = "dlbc",
+                 telemetry: Optional[SchedTelemetry] = None):
+        self.n_slots = n_slots
+        self.policy = get_policy(policy)
+        self.telemetry = telemetry or SchedTelemetry()
+
+    def refill(self, slots: Sequence[Optional[Any]],
+               queue: List) -> List[Tuple[int, Any]]:
+        """Pop up to ``policy.admit(...)`` requests and pair them with idle
+        slots (oldest request → lowest slot).  Mutates ``queue``."""
+        cap = SlotCapacity(list(slots))
+        idle = cap.idle_indices()
+        # clamp: a custom policy may over-admit; never index past the idle
+        # slots or pop an empty queue
+        k = min(self.policy.admit(len(idle), len(queue), self.n_slots),
+                len(idle), len(queue))
+        placements = [(idle[j], queue.pop(0)) for j in range(k)]
+        self.telemetry.spawns += len(placements)
+        return placements
+
+    def complete(self, latency_steps: Optional[float] = None):
+        """A sequence finished: count the join (finish analogue)."""
+        self.telemetry.joins += 1
+        if latency_steps is not None:
+            self.telemetry.record_latency(latency_steps)

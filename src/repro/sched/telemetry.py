@@ -1,0 +1,112 @@
+"""Fig. 10-style scheduling telemetry: spawn/join counters plus latency
+distributions (p50/p99), JSON-emittable for the benchmarks.
+
+``SchedCounters`` is the shared counter core — the simulator's Fig. 10
+counters (:class:`repro.core.runtime.Counters`) subclass it, so the IR
+simulator, the host pools, and the serving batcher all report through
+one counter vocabulary: *spawns* (``async`` analogue) and *joins*
+(``finish`` analogue).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Iterable, List
+
+#: Sliding window for latency samples: long-lived pools (the global data
+#: pool runs for the whole training job) must not grow memory per item.
+LATENCY_WINDOW = 8192
+
+
+def percentile(data: Iterable[float], p: float) -> float:
+    """Linear-interpolated percentile (numpy-compatible, dependency-free)."""
+    data = list(data)
+    if not data:
+        return 0.0
+    s = sorted(data)
+    k = (len(s) - 1) * (p / 100.0)
+    f = math.floor(k)
+    c = math.ceil(k)
+    if f == c:
+        return float(s[int(k)])
+    return s[f] + (s[c] - s[f]) * (k - f)
+
+
+@dataclass
+class SchedCounters:
+    """The Fig. 10 dynamic counts, substrate-neutral."""
+
+    spawns: int = 0      # tasks spawned (#async)
+    joins: int = 0       # joins performed (#finish)
+    barriers: int = 0
+    steps: int = 0
+    work: float = 0.0
+
+
+@dataclass
+class SchedTelemetry(SchedCounters):
+    """Counters + item accounting + latency distributions.
+
+    The record path is lock-free: ``deque.append`` on a bounded deque is
+    GIL-atomic, so worker threads record without contention (counter
+    increments likewise stay plain adds — they are only ever bumped from
+    the scheduling thread, matching the old pool).  Readers snapshot the
+    deque, retrying the rare copy-during-append race."""
+
+    serial_items: int = 0     # items run in the serial fallback block
+    parallel_items: int = 0   # items run inside spawned/caller chunks
+    steals: int = 0           # work-stealing executor only
+    #: most recent samples only (bounded window — see LATENCY_WINDOW)
+    latencies: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+
+    # Back-compat aliases for the pre-sched ``PoolStats`` field names.
+    @property
+    def tasks_spawned(self) -> int:
+        return self.spawns
+
+    @tasks_spawned.setter
+    def tasks_spawned(self, v: int):
+        self.spawns = v
+
+    def record_latency(self, seconds: float):
+        self.latencies.append(seconds)  # GIL-atomic, no lock on the hot path
+
+    def _lat_snapshot(self) -> List[float]:
+        while True:
+            try:
+                return list(self.latencies)
+            except RuntimeError:  # deque mutated during copy; retry
+                continue
+
+    def p50(self) -> float:
+        return percentile(self._lat_snapshot(), 50)
+
+    def p99(self) -> float:
+        return percentile(self._lat_snapshot(), 99)
+
+    def summary(self) -> Dict:
+        """Flat dict for benchmark tables / JSON artifacts."""
+        return dict(
+            spawns=self.spawns,
+            joins=self.joins,
+            barriers=self.barriers,
+            serial_items=self.serial_items,
+            parallel_items=self.parallel_items,
+            steals=self.steals,
+            n_latencies=len(self.latencies),
+            p50_ms=round(self.p50() * 1e3, 3),
+            p99_ms=round(self.p99() * 1e3, 3),
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.summary(), indent=1)
+
+    def reset(self):
+        self.spawns = self.joins = self.barriers = self.steps = 0
+        self.work = 0.0
+        self.serial_items = self.parallel_items = self.steals = 0
+        self.latencies = deque(maxlen=LATENCY_WINDOW)  # atomic rebind

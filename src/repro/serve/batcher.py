@@ -15,6 +15,12 @@ Compare with the LC baseline (``policy="lc"``): fixed batching — wait
 until a full batch accumulates, run it to completion, then take the next
 batch (static chunking of requests).  The benchmark measures mean/p99
 latency and slot utilisation for both.
+
+The admission decision itself lives in :mod:`repro.sched` (the shared
+policy engine): this module delegates slot refill to
+:class:`repro.sched.executors.SlotExecutor`, whose telemetry counts
+admissions as spawns and completed sequences as joins (Fig. 10
+analogues) alongside latency distributions.
 """
 
 from __future__ import annotations
@@ -29,6 +35,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import model as MDL
+from ..sched.executors import SlotExecutor
+from ..sched.policy import SchedPolicy
 
 
 @dataclass
@@ -61,12 +69,13 @@ class ContinuousBatcher:
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  cache_len: int = 256, policy: str = "dlbc"):
-        assert policy in ("dlbc", "lc")
+        assert isinstance(policy, SchedPolicy) or policy in ("dlbc", "lc")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
-        self.policy = policy
+        self.sched = SlotExecutor(n_slots, policy=policy)
+        self.policy = self.sched.policy.name
         self.cache = MDL.init_cache(cfg, n_slots, cache_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
@@ -80,23 +89,11 @@ class ContinuousBatcher:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _idle_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
-
     def _admit(self, now: int):
-        idle = self._idle_slots()
-        if self.policy == "dlbc":
-            # re-check every step; fill as many idle slots as requests
-            for slot in idle:
-                if not self.queue:
-                    break
-                self._place(slot, self.queue.pop(0), now)
-        else:  # lc: only start when a full batch can start together
-            if len(idle) == self.n_slots and len(self.queue) > 0:
-                for slot in idle:
-                    if not self.queue:
-                        break
-                    self._place(slot, self.queue.pop(0), now)
+        # Delegated to the shared policy engine: DLBC fills every idle
+        # slot at every step; LC only starts a full batch together.
+        for slot, req in self.sched.refill(self.slot_req, self.queue):
+            self._place(slot, req, now)
 
     def _place(self, slot: int, req: Request, now: int):
         req.start_step = now
@@ -135,7 +132,10 @@ class ContinuousBatcher:
             produced = len(r.tokens) - len(r.prompt)
             if produced >= r.max_new or self.slot_pos[i] >= self.cache_len - 1:
                 r.done_step = now
+                # latencies live in ServeStats (the serving-facing record);
+                # telemetry only counts the join so Fig. 10 comparisons hold
                 self.stats.latencies.append(now - r.arrive_step)
+                self.sched.complete()
                 self.slot_req[i] = None
                 self.slot_pos[i] = 0
 

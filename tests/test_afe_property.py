@@ -15,6 +15,8 @@ deterministic unit tests in test_ir_transforms.py and the DR/HL/FL
 kernels whose MHBD reads must keep their finishes (test_schemes.py)."""
 
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.afe import apply_afe

@@ -1,0 +1,317 @@
+"""repro.sched: chunk-plan properties, policy decisions, executor
+equivalence with the pre-refactor pool/batcher behaviour, telemetry."""
+
+import threading
+
+import pytest
+
+from repro.sched import (
+    DCAFE, DLBC, LC, ChunkPlan, FixedCapacity, Serial, SlotExecutor,
+    ThreadExecutor, WorkStealingExecutor, chunk_plan, get_policy, percentile,
+    static_plan,
+)
+from repro.sched.telemetry import SchedTelemetry
+
+
+# ---------------------------------------------------------------------------
+# chunk_plan properties (exhaustive over a grid — property-style without
+# requiring hypothesis)
+# ---------------------------------------------------------------------------
+
+
+GRID = [(lo, lo + n, idle)
+        for lo in (0, 3, 17)
+        for n in range(0, 41)
+        for idle in range(0, 8)]
+
+
+def test_chunk_plan_partitions_range_exactly():
+    for lo, hi, idle in GRID:
+        plan = chunk_plan(lo, hi, idle)
+        pos = lo
+        for a, b in plan.chunks:
+            assert a == pos and b >= a, (lo, hi, idle, plan)
+            pos = b
+        assert pos == hi, (lo, hi, idle, plan)
+
+
+def test_chunk_plan_caller_keeps_smallest():
+    for lo, hi, idle in GRID:
+        plan = chunk_plan(lo, hi, idle)
+        caller_sz = plan.caller[1] - plan.caller[0]
+        assert caller_sz == (hi - lo) // (idle + 1)
+        for a, b in plan.spawned:
+            assert b - a >= caller_sz
+
+
+def test_chunk_plan_remainder_spread_from_front():
+    """First ``n % tot`` spawned chunks get exactly one extra iteration."""
+    for lo, hi, idle in GRID:
+        n, tot = hi - lo, idle + 1
+        eq, r = divmod(n, tot)
+        plan = chunk_plan(lo, hi, idle)
+        sizes = [b - a for a, b in plan.spawned]
+        if eq > 0:
+            assert sizes == [eq + 1] * r + [eq] * (tot - 1 - r), \
+                (lo, hi, idle, sizes)
+        else:
+            # fewer items than workers: one item per spawned chunk,
+            # nothing left for the caller
+            assert sizes == [1] * r
+            assert plan.caller[0] == plan.caller[1]
+
+
+def test_chunk_plan_all_spawned_variant():
+    for lo, hi, idle in GRID:
+        plan = chunk_plan(lo, hi, idle, caller_keeps_smallest=False)
+        assert plan.caller[0] == plan.caller[1]
+        assert sum(b - a for a, b in plan.spawned) == hi - lo
+
+
+def test_static_plan_ceil_chunks():
+    for lo, hi, nchunks in [(0, 10, 4), (5, 6, 4), (0, 0, 3), (2, 33, 5)]:
+        plan = static_plan(lo, hi, nchunks)
+        assert plan.caller == (hi, hi)
+        pos = lo
+        for a, b in plan.spawned:
+            assert a == pos and b > a
+            pos = b
+        assert pos == hi
+        assert len(plan.spawned) <= nchunks
+
+
+# ---------------------------------------------------------------------------
+# Policy decisions
+# ---------------------------------------------------------------------------
+
+
+def test_dlbc_decides_parallel_iff_idle():
+    pol = DLBC()
+    d = pol.decide(0, 100, FixedCapacity(idle_n=3, total_n=4))
+    assert d.plan is not None and len(d.plan.spawned) == 3
+    d = pol.decide(0, 100, FixedCapacity(idle_n=0, total_n=4))
+    assert d.plan is None and d.recheck_every == 1
+
+
+def test_serial_never_parallel_never_rechecks():
+    d = Serial().decide(0, 100, FixedCapacity(idle_n=4, total_n=4))
+    assert d.plan is None and d.recheck_every == 0
+
+
+def test_lc_ignores_idleness():
+    d = LC().decide(0, 100, FixedCapacity(idle_n=0, total_n=4))
+    assert d.plan is not None
+    assert len(d.plan.spawned) == 4  # total workers, not idle
+    assert d.plan.caller == (100, 100)  # caller only joins
+
+
+def test_get_policy_resolution():
+    assert get_policy("dcafe").escape_join
+    assert not get_policy("dlbc").escape_join
+    p = DLBC(serial_check_every=4)
+    assert get_policy(p) is p
+    with pytest.raises(ValueError):
+        get_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# ThreadExecutor ≡ old DLBCPool (spawn/join counts preserved)
+# ---------------------------------------------------------------------------
+
+
+def test_thread_executor_counts_match_prerefactor_pool():
+    """On an all-idle pool of W workers the old DLBCPool spawned exactly
+    the Fig. 6 chunk count and performed one join; via-sched must agree."""
+    for w, n in [(3, 50), (4, 9), (2, 1), (4, 100)]:
+        ex = ThreadExecutor(n_workers=w)
+        try:
+            lock = threading.Lock()
+            done = []
+
+            def fn(i):
+                with lock:
+                    done.append(i)
+
+            ex.run_loop(list(range(n)), fn)
+            assert sorted(done) == list(range(n))
+            expect = chunk_plan(0, n, w)  # all W workers were idle
+            assert ex.telemetry.spawns == len(expect.spawned)
+            assert ex.telemetry.spawns <= w
+            assert ex.telemetry.joins == 1
+            assert ex.telemetry.parallel_items == n
+            # old PoolStats field names still readable
+            assert ex.telemetry.tasks_spawned == ex.telemetry.spawns
+        finally:
+            ex.shutdown()
+
+
+def test_thread_executor_serial_fallback_counts():
+    """With the single worker occupied, items run in the serial block with
+    per-item re-probe — same as the old pool's serial arm."""
+    import time
+
+    ex = ThreadExecutor(n_workers=1)
+    try:
+        release = threading.Event()
+        ev = ex._submit(lambda: release.wait(2))
+        time.sleep(0.05)
+        done = []
+        ex.run_loop(list(range(10)), done.append)
+        release.set()
+        ev.wait(2)
+        assert sorted(done) == list(range(10))
+        assert ex.telemetry.serial_items >= 1
+    finally:
+        ex.shutdown()
+
+
+def test_dlbc_pool_wrapper_is_thread_executor():
+    from repro.data.pool import DLBCPool
+
+    pool = DLBCPool(n_workers=2)
+    try:
+        done = []
+        lock = threading.Lock()
+
+        def fn(i):
+            with lock:
+                done.append(i)
+
+        pool.run_loop(list(range(20)), fn)
+        assert sorted(done) == list(range(20))
+        assert pool.stats.joins == 1
+        assert pool.stats.tasks_spawned <= 2
+        assert isinstance(pool, ThreadExecutor)
+    finally:
+        pool.shutdown()
+
+
+def test_work_stealing_executor_runs_all_items():
+    ex = WorkStealingExecutor(n_workers=3)
+    try:
+        lock = threading.Lock()
+        done = []
+
+        def fn(i):
+            with lock:
+                done.append(i)
+
+        for _ in range(3):
+            ex.run_loop(list(range(40)), fn)
+        assert sorted(done) == sorted(list(range(40)) * 3)
+        assert ex.telemetry.joins == 3
+    finally:
+        ex.shutdown()
+
+
+def test_dcafe_scope_single_join_many_loops():
+    ex = ThreadExecutor(n_workers=2)
+    try:
+        lock = threading.Lock()
+        out = []
+
+        def fn(i):
+            with lock:
+                out.append(i)
+
+        with ex.finish() as scope:
+            for _ in range(4):
+                ex.run_loop(list(range(8)), fn, policy="dcafe", scope=scope)
+        assert len(out) == 32
+        assert ex.telemetry.joins == 1  # the aggressive-finish-elimination win
+        assert ex.telemetry.spawns >= 4
+    finally:
+        ex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# SlotExecutor ≡ old batcher admission logic
+# ---------------------------------------------------------------------------
+
+
+def _old_admit(policy, slot_req, queue, n_slots):
+    """The pre-refactor ContinuousBatcher._admit, as a reference oracle."""
+    placements = []
+    idle = [i for i, r in enumerate(slot_req) if r is None]
+    if policy == "dlbc":
+        for slot in idle:
+            if not queue:
+                break
+            placements.append((slot, queue.pop(0)))
+    else:  # lc
+        if len(idle) == n_slots and len(queue) > 0:
+            for slot in idle:
+                if not queue:
+                    break
+                placements.append((slot, queue.pop(0)))
+    return placements
+
+
+@pytest.mark.parametrize("policy", ["dlbc", "lc"])
+def test_slot_refill_matches_prerefactor_batcher(policy):
+    cases = [
+        ([None, None, None, None], list("abcdef")),
+        ([None, "X", None, "Y"], list("abc")),
+        (["X", "Y", "Z", "W"], list("ab")),
+        ([None, None, None, None], []),
+        ([None, "X", None, None], list("a")),
+        ([None, None], list("abc")),
+    ]
+    for slots, queue in cases:
+        q_old, q_new = list(queue), list(queue)
+        want = _old_admit(policy, slots, q_old, len(slots))
+        ex = SlotExecutor(len(slots), policy=policy)
+        got = ex.refill(slots, q_new)
+        assert got == want, (policy, slots, queue)
+        assert q_new == q_old
+        assert ex.telemetry.spawns == len(want)
+
+
+def test_slot_executor_counts_joins_on_complete():
+    ex = SlotExecutor(4, policy="dlbc")
+    ex.refill([None] * 4, list("abcd"))
+    for lat in (3.0, 7.0):
+        ex.complete(latency_steps=lat)
+    assert ex.telemetry.spawns == 4
+    assert ex.telemetry.joins == 2
+    assert ex.telemetry.p50() == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_interpolation():
+    assert percentile([], 99) == 0.0
+    assert percentile([5.0], 50) == 5.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.5
+    assert percentile(list(map(float, range(1, 101))), 99) == pytest.approx(
+        99.01)
+
+
+def test_telemetry_json_roundtrip():
+    import json
+
+    t = SchedTelemetry()
+    t.spawns = 5
+    t.joins = 1
+    t.record_latency(0.010)
+    t.record_latency(0.030)
+    d = json.loads(t.to_json())
+    assert d["spawns"] == 5 and d["joins"] == 1
+    assert d["p50_ms"] == pytest.approx(20.0)
+    t.reset()
+    assert t.spawns == 0 and not t.latencies
+
+
+def test_sim_counters_share_sched_vocabulary():
+    from repro.core.runtime import Counters
+    from repro.sched.telemetry import SchedCounters
+
+    c = Counters()
+    assert isinstance(c, SchedCounters)
+    c.asyncs += 3
+    c.finishes += 1
+    assert c.spawns == 3 and c.joins == 1
+    assert c.as_dict()["asyncs"] == 3
