@@ -1,0 +1,131 @@
+"""Adoption-surface policy ladder (ROADMAP "adopt repro.sched").
+
+Runs the three newest `repro.sched` consumers — train-step scheduling,
+checkpoint shard-write I/O, and MoE token dispatch — across the policy
+ladder and emits Fig. 10-comparable spawn/join counts plus p50/p99
+latencies per surface.  The headline regression gate (asserted by CI from
+the saved JSON): DCAFE performs **no more joins than LC** on every
+surface where both run — the paper's aggressive-finish-elimination claim
+carried onto production surfaces.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import moe as MOE
+from repro.sched import SchedTelemetry
+from repro.train.train_step import StepConfig
+from repro.train.trainer import TrainerConfig, run_training
+
+from .common import report
+
+POLICIES = ("serial", "lc", "dlbc", "dcafe")
+
+
+def _row(surface, policy, s):
+    return [surface, policy, s["spawns"], s["joins"],
+            f"{s['p50_ms']:.2f}", f"{s['p99_ms']:.2f}"]
+
+
+def bench_train_step(records, rows, steps: int = 2):
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    shape = ShapeConfig("bench", 64, 8, "train", microbatches=4)
+    for policy in POLICIES:
+        d = tempfile.mkdtemp()
+        try:
+            rep = run_training(
+                cfg, shape,
+                TrainerConfig(steps=steps, ckpt_every=100, ckpt_dir=d),
+                StepConfig(policy="afe_bucket", sched_policy=policy,
+                           q_chunk=64, k_chunk=64, ssm_chunk=32),
+                eval_loss_hook=False)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        s = rep.sched["train_step"]  # already carries policy=<name>
+        rows.append(_row("train_step", policy, s))
+        records.append(dict(surface="train_step", **s))
+
+
+def bench_checkpoint(records, rows, n_saves: int = 3):
+    tree = {f"layer_{i}": {"w": jnp.ones((64, 64)) * i,
+                           "b": jnp.zeros((64,))}
+            for i in range(16)}
+    for policy in POLICIES:
+        d = tempfile.mkdtemp()
+        try:
+            mgr = CheckpointManager(d, keep=2, sched_policy=policy)
+            t0 = time.perf_counter()
+            for s in range(n_saves):
+                mgr.save(s + 1, tree, blocking=False)
+            mgr.wait()
+            wall = time.perf_counter() - t0
+            summary = mgr.telemetry.summary()
+            mgr.close()
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        rows.append(_row("checkpoint", policy, summary))
+        records.append(dict(surface="checkpoint", policy=policy,
+                            wall_s=wall, n_saves=n_saves, **summary))
+
+
+def bench_moe(records, rows, T: int = 512):
+    import dataclasses
+
+    from .bench_moe_dispatch import skewed_tokens
+
+    cfg0 = get_config("mixtral-8x7b", smoke=True)
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg0, jnp.float32)
+    # clustered tokens: the load skew where static chunking drops tokens
+    x = skewed_tokens(jax.random.PRNGKey(1), T, cfg0.d_model, 4, 0.05)
+    for dispatch in ("lc", "dlbc"):
+        cfg = dataclasses.replace(cfg0, moe_dispatch=dispatch,
+                                  moe_capacity_factor=1.0)
+        tel = SchedTelemetry()
+        apply = jax.jit(
+            lambda px, xx: MOE.moe_apply(px, cfg, xx, return_stats=True))
+        y, stats = apply(p, x)  # compile
+        jax.block_until_ready(y)
+        for _ in range(3):
+            t0 = time.perf_counter()
+            y, stats = apply(p, x)
+            jax.block_until_ready(y)
+            tel.record_latency(time.perf_counter() - t0)
+        tel.spawns = int(stats["spawns"])
+        tel.joins = int(stats["joins"])
+        s = tel.summary()
+        rows.append(_row(f"moe_dispatch(drop={float(stats['dropped_frac']):.3f})",
+                         dispatch, s))
+        records.append(dict(surface="moe_dispatch", policy=dispatch,
+                            dropped_frac=float(stats["dropped_frac"]), **s))
+
+
+def run():
+    rows, records = [], []
+    bench_train_step(records, rows)
+    bench_checkpoint(records, rows)
+    bench_moe(records, rows)
+    out = report(
+        "repro.sched adoption surfaces: spawn/join/latency per policy",
+        rows, ["surface", "policy", "spawns", "joins", "p50_ms", "p99_ms"],
+        "adoption", records)
+    # The AFE claim on production surfaces: DCAFE never joins more than LC.
+    joins = {(r["surface"], r["policy"]): r["joins"] for r in records}
+    for surface in ("train_step", "checkpoint"):
+        lc, dcafe = joins[(surface, "lc")], joins[(surface, "dcafe")]
+        ok = dcafe <= lc
+        print(f"{surface}: DCAFE joins ({dcafe}) <= LC joins ({lc}): {ok}")
+        assert ok, (surface, dcafe, lc)
+    return out
+
+
+if __name__ == "__main__":
+    run()

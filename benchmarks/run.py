@@ -10,6 +10,8 @@ One benchmark per paper table/figure plus the TPU-side analogues:
   moe        — DLBC vs LC MoE dispatch drop rates           (§3.2 on TPU)
   batcher    — DLBC continuous batching vs LC fixed batches (§3.2 serving)
   sched      — repro.sched policy ladder on the host pool (uniform/skewed)
+  adoption   — sched adoption surfaces: train-step / checkpoint / MoE
+               spawn-join telemetry + the DCAFE≤LC join regression gate
   design     — paper §6 DLBC design-choice study
   roofline   — per-cell roofline table from dry-run artifacts (§Roofline)
 """
@@ -18,12 +20,13 @@ import sys
 import time
 
 from . import (
-    bench_batcher, bench_design_choices, bench_fig10_counts,
+    bench_adoption, bench_batcher, bench_design_choices, bench_fig10_counts,
     bench_fig11_speedup, bench_fig12_schemes, bench_fig13_energy,
     bench_moe_dispatch, bench_roofline, bench_sched, bench_sync_policy,
 )
 
 ALL = {
+    "adoption": bench_adoption.run,
     "fig10": bench_fig10_counts.run,
     "fig11": bench_fig11_speedup.run,
     "fig12": bench_fig12_schemes.run,

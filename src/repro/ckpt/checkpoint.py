@@ -7,10 +7,14 @@ Design (multi-host-shaped, exercised single-host here):
 * writes go to a temp dir, fsync'd, then atomically renamed —
   a crash mid-write never corrupts the latest checkpoint
   (the trainer's restore scans for the newest *complete* step);
-* saving is asynchronous: the arrays are snapshotted to host memory in the
-  trainer thread (cheap device→host copy), the file I/O runs on the DLBC
-  worker pool (repro/data/pool.py — the paper's runtime scheduling real
-  host-side work);
+* saving is asynchronous and scheduled by ``repro.sched``: the arrays are
+  snapshotted to host memory in the trainer thread (cheap device→host
+  copy), then the per-shard file writes run on a
+  :class:`repro.sched.executors.ThreadExecutor` under the manager's
+  scheduling policy.  Under the default DCAFE policy the spawned write
+  chunks escape their per-loop join into a :class:`FinishScope` — one
+  join per ``save``, performed by :meth:`wait`, so the train loop overlaps
+  with the I/O and the atomic publish happens at the join;
 * restore supports **elastic resharding**: arrays are reassembled
   logically and re-placed under the *current* mesh sharding, so a job can
   restart on a different pod count (checkpoint written on 512 chips,
@@ -22,66 +26,110 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 import time
+import weakref
 from pathlib import Path
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import numpy as np
 
-
-def _flatten_with_paths(tree, prefix=""):
-    out = []
-    if isinstance(tree, dict):
-        for k in sorted(tree):
-            out.extend(_flatten_with_paths(tree[k], f"{prefix}/{k}"))
-    else:
-        out.append((prefix, tree))
-    return out
-
-
-def _unflatten_from_paths(items: dict):
-    root: dict = {}
-    for path, val in items.items():
-        keys = [k for k in path.split("/") if k]
-        node = root
-        for k in keys[:-1]:
-            node = node.setdefault(k, {})
-        node[keys[-1]] = val
-    return root
+from ..sched import FinishScope, SchedTelemetry, ThreadExecutor, get_policy
 
 
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3,
-                 async_pool=None):
+                 executor: Optional[ThreadExecutor] = None,
+                 sched_policy: str = "dcafe", n_io_workers: int = 4):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
-        self._pool = async_pool
-        self._pending: Optional[threading.Thread] = None
+        self.policy = get_policy(sched_policy)
+        # The I/O pool is created lazily on the first save: restore-only
+        # managers never spawn threads, and close() is only needed once
+        # a save has run.
+        self._own_executor = executor is None
+        self._ex = executor
+        self._n_io_workers = n_io_workers
+        self.telemetry = executor.telemetry if executor is not None \
+            else SchedTelemetry()
+        self._scope: Optional[FinishScope] = None
+        self._finalize: Optional[Callable[[], None]] = None
+
+    @property
+    def executor(self) -> ThreadExecutor:
+        if self._ex is None:
+            self._ex = ThreadExecutor(n_workers=self._n_io_workers,
+                                      telemetry=self.telemetry)
+            if self._own_executor:
+                # a dropped manager must not leak its worker threads even
+                # if the caller never reached close()
+                weakref.finalize(self, self._ex.shutdown)
+        return self._ex
+
+    @property
+    def pending(self) -> bool:
+        """A non-blocking save is awaiting its join/publish."""
+        return self._scope is not None or self._finalize is not None
 
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree: dict, *, blocking: bool = False):
-        """Snapshot to host, then write asynchronously."""
+        """Snapshot to host, then write shards through the scheduler.
+
+        Returns once the shard writes are *scheduled* (plus whatever chunk
+        the DCAFE plan keeps on the caller); the checkpoint is published
+        atomically by :meth:`wait` — exactly one join per save.  A
+        non-blocking save is therefore NOT durable until the next
+        ``wait()``/``save()``/``close()`` — callers wanting overlap with
+        bounded exposure should ``wait()`` shortly after (the trainer
+        does so one step later, once the I/O has had a step to finish).
+        """
         snap = {}
         for path, arr in _flatten_with_paths(tree):
             snap[path] = np.asarray(arr)  # device→host copy now
         self.wait()
-        t = threading.Thread(target=self._write, args=(step, snap),
-                             daemon=True)
-        t.start()
-        self._pending = t
+        self._scope = FinishScope(self.telemetry) \
+            if self.policy.escape_join else None
+        self._finalize = self._write(step, snap, self._scope)
         if blocking:
             self.wait()
 
     def wait(self):
-        if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+        """Join the pending save (ONE join — the escaped finish) and
+        atomically publish it."""
+        if self._scope is not None:
+            self._scope.join()
+            self._scope = None
+        if self._finalize is not None:
+            # cleared before the call: a failed publish raises once, not
+            # on every subsequent wait()/close()
+            fin, self._finalize = self._finalize, None
+            fin()
 
-    def _write(self, step: int, snap: dict):
+    def close(self):
+        try:
+            self.wait()
+        finally:
+            # a failed pending publish must not leak the I/O pool
+            if self._own_executor and self._ex is not None:
+                self._ex.shutdown()
+                self._ex = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def _write(self, step: int, snap: dict, scope: Optional[FinishScope]):
+        """Schedule the shard writes; return the publish closure.
+
+        The manifest is fully determined by the snapshot, so it is built
+        up front and only the ``np.save`` calls — the actual I/O — run as
+        scheduled tasks.
+        """
         proc = jax.process_index()
         tmp = self.dir / f"tmp_{step}_{proc}_{os.getpid()}"
         final = self.dir / f"step_{step:010d}"
@@ -89,6 +137,7 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         manifest = {}
+        shard_jobs = []
         for i, (path, arr) in enumerate(sorted(snap.items())):
             fname = f"shard_{proc}_{i}.npy"
             logical_dtype = str(arr.dtype)
@@ -96,16 +145,42 @@ class CheckpointManager:
                 # bf16 & friends: store as a same-width integer view; the
                 # logical dtype in the manifest restores it on load.
                 arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
-            np.save(tmp / fname, arr)
             manifest[path] = {"file": fname, "shape": list(arr.shape),
                               "dtype": logical_dtype}
-        (tmp / f"manifest_{proc}.json").write_text(json.dumps(manifest))
-        (tmp / "COMMIT").write_text(str(time.time()))
-        # Atomic publish.
-        if final.exists():
-            shutil.rmtree(final)
-        os.replace(tmp, final)
-        self._gc()
+            shard_jobs.append((tmp / fname, arr))
+
+        # Failed writes are collected rather than raised on the worker
+        # (an exception would kill the pool thread but still fire the
+        # task's done event, letting the join succeed); publish() checks
+        # the list so a failed shard can never be COMMITted.
+        errors = []
+
+        def write_shard(job):
+            fname, arr = job
+            try:
+                np.save(fname, arr)
+            except Exception as e:  # noqa: BLE001 — re-raised at publish
+                errors.append((str(fname), e))
+
+        self.executor.run_loop(shard_jobs, write_shard, policy=self.policy,
+                               scope=scope)
+
+        def publish():
+            if errors:
+                fname, err = errors[0]
+                raise RuntimeError(
+                    f"checkpoint step {step}: {len(errors)} shard "
+                    f"write(s) failed (first: {fname}: {err!r}); "
+                    "leaving the un-COMMITted temp dir") from err
+            (tmp / f"manifest_{proc}.json").write_text(json.dumps(manifest))
+            (tmp / "COMMIT").write_text(str(time.time()))
+            # Atomic publish.
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        return publish
 
     def _gc(self):
         steps = self.all_steps()
@@ -153,3 +228,24 @@ class CheckpointManager:
             else:
                 items[path] = jax.numpy.asarray(arr)
         return step, _unflatten_from_paths(items)
+
+
+def _flatten_with_paths(tree, prefix=""):
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_flatten_with_paths(tree[k], f"{prefix}/{k}"))
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def _unflatten_from_paths(items: dict):
+    root: dict = {}
+    for path, val in items.items():
+        keys = [k for k in path.split("/") if k]
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = val
+    return root

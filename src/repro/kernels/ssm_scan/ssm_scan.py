@@ -22,6 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Pallas renamed TPUCompilerParams → CompilerParams across jax releases;
+# resolve whichever versioned class the installed jax exposes.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 
 def _ssm_kernel(dA_ref, dBx_ref, C_ref, y_ref, h_scratch, *, chunk: int):
     """One (b, d-block, chunk) cell.
@@ -78,7 +83,7 @@ def ssm_scan(
                                lambda b, d, c: (b, c, d)),
         out_shape=jax.ShapeDtypeStruct((B, L, Di), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

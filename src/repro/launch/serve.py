@@ -25,6 +25,8 @@ def main(argv=None):
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--policy", default="dlbc", choices=("dlbc", "lc"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry-json", default=None,
+                    help="also dump the slot-scheduler telemetry here")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -40,13 +42,19 @@ def main(argv=None):
     batcher = ContinuousBatcher(cfg, params, n_slots=args.slots,
                                 cache_len=args.cache_len, policy=args.policy)
     stats = batcher.run(reqs)
+    # Fig. 10-comparable spawn/join telemetry from the slot scheduler
+    telemetry = batcher.sched.telemetry.summary()
     print(json.dumps({
         "arch": cfg.name, "policy": args.policy, "steps": stats.steps,
         "utilization": round(stats.utilization, 3),
         "mean_latency_steps": float(np.mean(stats.latencies)),
         "p99_latency_steps": float(np.percentile(stats.latencies, 99)),
         "mean_queue_wait": float(np.mean(stats.queue_waits)),
+        "sched": telemetry,
     }, indent=1))
+    if args.telemetry_json:
+        with open(args.telemetry_json, "w") as f:
+            json.dump({"serve_slots": telemetry}, f, indent=1)
 
 
 if __name__ == "__main__":

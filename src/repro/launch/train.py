@@ -27,29 +27,45 @@ def main(argv=None):
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--policy", default="afe", choices=POLICIES)
+    ap.add_argument("--sched-policy", default="dlbc",
+                    choices=("serial", "lc", "dlbc", "dcafe"),
+                    help="repro.sched policy scheduling the train step "
+                         "(microbatch unroll + gradient buckets)")
+    ap.add_argument("--ckpt-sched-policy", default="dcafe",
+                    choices=("serial", "lc", "dlbc", "dcafe"),
+                    help="repro.sched policy for checkpoint shard writes")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--failure-at", type=int, default=None)
+    ap.add_argument("--telemetry-json", default=None,
+                    help="also dump the per-surface sched telemetry here")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train",
                         microbatches=args.microbatches)
-    scfg = StepConfig(policy=args.policy,
+    scfg = StepConfig(policy=args.policy, sched_policy=args.sched_policy,
                       q_chunk=min(512, args.seq_len),
                       k_chunk=min(512, args.seq_len),
                       ssm_chunk=min(128, args.seq_len))
     tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
-                         ckpt_dir=args.ckpt_dir, failure_at=args.failure_at)
+                         ckpt_dir=args.ckpt_dir, failure_at=args.failure_at,
+                         ckpt_sched_policy=args.ckpt_sched_policy)
     rep = run_training(cfg, shape, tcfg, scfg, AdamWConfig())
-    print(json.dumps({
+    out = {
         "arch": cfg.name, "completed": rep.completed,
         "resumed_from": rep.resumed_from,
         "first_loss": rep.losses[0] if rep.losses else None,
         "last_loss": rep.losses[-1] if rep.losses else None,
         "stragglers": rep.stragglers,
         "mean_step_s": sum(rep.step_times) / max(1, len(rep.step_times)),
-    }, indent=1))
+        # Fig. 10-comparable spawn/join telemetry per execution surface
+        "sched": rep.sched,
+    }
+    print(json.dumps(out, indent=1))
+    if args.telemetry_json:
+        with open(args.telemetry_json, "w") as f:
+            json.dump(rep.sched, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -16,10 +16,12 @@ The paper's DLBC policy, mapped onto MoE token routing (DESIGN.md §2.2):
   mechanism in static-shape SPMD form.  Same total buffer, strictly fewer
   dropped tokens (measured in tests/benchmarks).
 
-Expert compute is a capacity-buffer grouped matmul
-``(E, C, d) × (E, d, f)`` — einsum on the XLA path; the Pallas kernel in
-repro/kernels/moe_dispatch implements the same contraction with explicit
-VMEM tiling.
+Admission (who gets a slot, who overflows) is decided by
+:class:`repro.sched.capacity.ExpertCapacityProvider` — the shared
+DLBC/LC engine's view of per-expert slots; this module no longer owns
+any drop arithmetic.  The dispatch/FFN/combine mechanics live next to
+the Pallas kernel in :mod:`repro.kernels.moe_dispatch.ops` (einsum on
+the XLA path, the grouped-matmul kernel with ``use_kernel=True``).
 """
 
 from __future__ import annotations
@@ -30,6 +32,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.moe_dispatch.ops import dispatch_combine
+from ..sched import ExpertCapacityProvider
 from .layers import _norm_init
 
 
@@ -94,30 +98,8 @@ def route(x: jnp.ndarray, router_w: jnp.ndarray, top_k: int):
     return gates, ids.astype(jnp.int32), probs
 
 
-def _dispatch_combine(x, gates, ids, pos, keep, E, C, p, act):
-    """Scatter tokens into (E, C, d) buffers, run expert FFN, gather back."""
-    T, d = x.shape
-    K = ids.shape[1]
-    slot = ids * C + jnp.minimum(pos, C - 1)  # (T, K)
-    keepf = keep.astype(x.dtype)
-    buf = jnp.zeros((E * C, d), x.dtype)
-    # Slots are unique per (expert, pos) by construction → add == set.
-    buf = buf.at[slot.reshape(-1)].add(
-        (x[:, None, :] * keepf[..., None]).reshape(T * K, d))
-    buf = buf.reshape(E, C, d)
-    if act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"])) * \
-            jnp.einsum("ecd,edf->ecf", buf, p["w3"])
-    else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w1"]))
-    out = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(E * C, d)
-    gathered = out[slot.reshape(-1)].reshape(T, K, d)
-    w = (gates * keep).astype(x.dtype)
-    return jnp.einsum("tkd,tk->td", gathered, w)
-
-
 def moe_apply(p: dict, cfg, x: jnp.ndarray,
-              return_stats: bool = False):
+              return_stats: bool = False, use_kernel: bool = False):
     """x: (B, S, d) or (T, d).  Dispatch per cfg.moe_dispatch."""
     # NOTE (refuted hypothesis — EXPERIMENTS.md §Perf iteration 7):
     # constraining the flattened token dim to (data × model) sharding was
@@ -132,22 +114,28 @@ def moe_apply(p: dict, cfg, x: jnp.ndarray,
     T, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
     C = capacity(T, E, K, cfg.moe_capacity_factor)
+    cap = ExpertCapacityProvider(E, C)
     gates, ids, probs = route(x, p["router"], K)
+    rounds = 1
 
     if cfg.moe_dispatch == "lc":
+        # Static chunking: one admission round against fixed capacity;
+        # overflow is dropped (the residual path carries those tokens).
         pos = _positions_in_expert(ids, E)
-        keep = pos < C
-        y = _dispatch_combine(x, gates, ids, pos, keep, E, C, p, cfg.act)
+        keep = cap.admit_mask(pos)
+        y = dispatch_combine(x, gates, ids, pos, keep, E, C, p, cfg.act,
+                             use_kernel=use_kernel)
         dropped = jnp.sum(~keep)
     else:
         # --- DLBC round 1: eqChunk-balanced primary dispatch -------------
         pos1 = _positions_in_expert(ids, E)
-        keep1 = pos1 < C
+        keep1 = cap.admit_mask(pos1)
         # --- round 2: overflow re-routed to the next-best expert --------
         # (the serial block's "re-check for idle workers": tokens that
         # found their expert full try the least-loaded alternative).
+        rounds = 2
         load = _expert_load(ids, keep1, E)          # (E,) used slots
-        resid = jnp.maximum(C - load, 0)            # idle capacity
+        resid = cap.residual(load)                  # idle capacity
         overflow = ~keep1                           # (T, K)
         # next-best expert = argmax of probs weighted by residual capacity
         avail = probs * (resid[None, :] > 0)
@@ -159,20 +147,25 @@ def moe_apply(p: dict, cfg, x: jnp.ndarray,
         )
         ids_final = jnp.where(overflow, ids2, ids)
         pos_final = jnp.where(overflow, pos2, pos1)
-        keep = pos_final < C
+        keep = cap.admit_mask(pos_final)
         # Rerouted tokens are weighted by the probability of the expert
         # that actually serves them (router-consistent combine).
         alt_gate = jnp.take_along_axis(probs, ids_final.astype(jnp.int32),
                                        axis=-1).astype(gates.dtype)
         gates_final = jnp.where(overflow, alt_gate, gates)
-        y = _dispatch_combine(x, gates_final, ids_final, pos_final, keep, E,
-                              C, p, cfg.act)
+        y = dispatch_combine(x, gates_final, ids_final, pos_final, keep, E,
+                             C, p, cfg.act, use_kernel=use_kernel)
         dropped = jnp.sum(~keep)
 
     y = y.reshape(orig_shape)
     if return_stats:
         frac = dropped / (T * K)
-        return y, {"dropped_frac": frac}
+        # SchedTelemetry vocabulary for the host side: an admitted
+        # (token, choice) pair is a spawn; the single gate-combine is the
+        # join regardless of how many admission rounds ran.
+        return y, {"dropped_frac": frac, "spawns": jnp.sum(keep),
+                   "joins": 1, "rounds": rounds,
+                   "total_slots": cap.total()}
     return y
 
 

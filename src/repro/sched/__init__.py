@@ -27,8 +27,8 @@ counters), ``repro.data.pool`` (host pool), ``repro.serve.batcher``
 """
 
 from .capacity import (  # noqa: F401
-    CapacityProvider, FixedCapacity, PoolCapacity, SimWorkerCapacity,
-    SlotCapacity,
+    CapacityProvider, ExpertCapacityProvider, FixedCapacity, PoolCapacity,
+    SimWorkerCapacity, SlotCapacity,
 )
 from .policy import (  # noqa: F401
     DCAFE, DLBC, LC, POLICIES, ChunkPlan, Decision, SchedPolicy, Serial,

@@ -71,6 +71,48 @@ class PoolCapacity:
         return self._ex.n_workers
 
 
+class ExpertCapacityProvider:
+    """Per-expert slot capacity for MoE dispatch — the device-side
+    analogue of :class:`SlotCapacity`: expert ``e`` owns ``slots_per_expert``
+    capacity-buffer rows, and a (token, choice) pair is a task that may be
+    admitted into one of them.
+
+    This is where the MoE drop/admission arithmetic lives (it used to be a
+    private policy inside ``repro.models.moe``): LC admits a token iff its
+    static slot position fits (``admit_mask``), DLBC re-routes overflow
+    against the residual capacity (``residual`` — the "idle workers" read
+    of this substrate, per expert).  The array-valued reads are traced
+    under jit; like every provider here they are plain unsynchronised
+    reads of scheduler state (paper §3.2.1) — in SPMD form the "benign
+    race" becomes reading the round-1 load before round-2 admission.
+    """
+
+    def __init__(self, n_experts: int, slots_per_expert: int):
+        self.n_experts = n_experts
+        self.slots_per_expert = slots_per_expert
+
+    def total(self) -> int:
+        return self.n_experts * self.slots_per_expert
+
+    def idle(self) -> int:
+        """Before any dispatch every slot is idle; per-expert residuals
+        during dispatch come from :meth:`residual` (traced arrays)."""
+        return self.total()
+
+    def admit_mask(self, pos):
+        """Admission rule: a (token, choice) with running slot index
+        ``pos`` inside its chosen expert is admitted iff a slot exists.
+        Works on jnp arrays (static-shape SPMD) and plain ints alike."""
+        return pos < self.slots_per_expert
+
+    def residual(self, load):
+        """Idle slots per expert given the observed per-expert ``load``
+        (an (E,) array) — the capacity round-2 re-routing admits against."""
+        import jax.numpy as jnp
+
+        return jnp.maximum(self.slots_per_expert - load, 0)
+
+
 class SlotCapacity:
     """Device decode slots of the serving batcher: a slot is idle when no
     request occupies it."""

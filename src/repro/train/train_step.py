@@ -38,8 +38,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, ShapeConfig
-from ..distributed.sharding import current_mesh, fsdp_axes, param_specs_tree
+from ..distributed.sharding import current_mesh, param_specs_tree
 from ..models import model as MDL
+from ..sched import FixedCapacity, get_policy
 from .optimizer import AdamWConfig, adamw_update
 
 POLICIES = ("unopt", "lc", "afe", "afe_bucket")
@@ -49,7 +50,9 @@ POLICIES = ("unopt", "lc", "afe", "afe_bucket")
 class StepConfig:
     policy: str = "afe"
     grad_compress: str = "none"   # none | bf16
-    n_buckets: int = 4            # afe_bucket fusion width
+    n_buckets: int = 4            # reduction streams (afe_bucket width)
+    sched_policy: str = "dlbc"    # repro.sched policy scheduling the step:
+                                  # microbatch unroll + gradient bucketing
     schedule: str = "masked"      # attention chunk schedule (masked | tri)
     q_chunk: int = 1024
     k_chunk: int = 1024
@@ -73,20 +76,50 @@ def _replicated_specs(tree):
     return jax.tree.map(lambda x: P(*([None] * x.ndim)), tree)
 
 
-def _bucketize(grads, n_buckets: int):
-    """Concatenate raveled grads into ~size-balanced fp32 buckets
-    (greedy LPT — the DLBC 'equal chunks, remainder spread' policy applied
-    to collective payloads).  Returns (buckets, spec) + unflatten fn."""
+def _bucketize(grads, n_buckets: int, policy=None, capacity=None):
+    """Concatenate raveled grads into fp32 reduction buckets.
+
+    Bucket assignment is scheduled through ``repro.sched`` when a policy
+    is given: the policy's ``decide`` over the leaf list yields a
+    ``ChunkPlan``, and the *bucket count* comes from that plan — the
+    Fig. 6 arithmetic over ``capacity`` (default: ``n_buckets`` reduction
+    streams, all but the caller's idle), so fewer idle streams mean fewer
+    buckets.  Payload is then spread across that many buckets by greedy
+    LPT (bytes, not leaf counts — one embedding leaf outweighs hundreds
+    of norm scales), with the caller — the thread issuing the step —
+    keeping the smallest-payload bucket, ordered last.
+
+    When the policy declines the parallel arm (no idle reduction streams,
+    or ``policy=None``), falls back to LPT into ``n_buckets`` bins — the
+    fixed-bucket behaviour, kept as the serial arm and as the oracle the
+    sched path is tested against.
+
+    Returns (flatten, unflatten).
+    """
     leaves, treedef = jax.tree.flatten(grads)
     sizes = [int(l.size) for l in leaves]
     order = sorted(range(len(leaves)), key=lambda i: -sizes[i])
-    bins = [[] for _ in range(n_buckets)]
-    bin_sz = [0] * n_buckets
+    nb = n_buckets
+    caller_last = False
+    if policy is not None:
+        policy = get_policy(policy)
+        if capacity is None:
+            capacity = FixedCapacity(idle_n=n_buckets - 1, total_n=n_buckets)
+        plan = policy.decide(0, len(leaves), capacity).plan
+        if plan is not None:
+            nb = len([c for c in plan.chunks if c[1] > c[0]])
+            caller_last = plan.caller[1] > plan.caller[0]
+    nb = max(1, min(nb, len(sizes) or 1))
+    bins = [[] for _ in range(nb)]
+    bin_sz = [0] * nb
     for i in order:
-        j = min(range(n_buckets), key=lambda b: bin_sz[b])
+        j = min(range(nb), key=lambda b: bin_sz[b])
         bins[j].append(i)
         bin_sz[j] += sizes[i]
     bins = [b for b in bins if b]
+    if caller_last:
+        # the caller keeps the smallest chunk: lightest payload last
+        bins.sort(key=lambda b: -sum(sizes[i] for i in b))
 
     def flatten(grads_leaves):
         out = []
@@ -119,6 +152,39 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
     fwd_kw = dict(schedule=scfg.schedule, q_chunk=scfg.q_chunk,
                   k_chunk=scfg.k_chunk, ssm_chunk=scfg.ssm_chunk,
                   remat=scfg.remat)
+
+    # --- scheduling (repro.sched): both step-internal loops are planned by
+    # the one policy engine.  Capacity = the step's reduction streams
+    # (n_buckets of them; all but the caller's are idle when the step is
+    # issued).  The microbatch plan sets the scan unroll (how many
+    # accumulation bodies the compiler sees at once — the chunk spawned
+    # together); the bucket plan partitions gradient leaves (below).
+    sched_pol = get_policy(scfg.sched_policy)
+    sched_cap = FixedCapacity(idle_n=scfg.n_buckets - 1,
+                              total_n=scfg.n_buckets)
+    mb_plan = sched_pol.decide(0, M, sched_cap).plan if M > 1 else None
+    mb_unroll = max([1] + [b - a for a, b in mb_plan.chunks]) \
+        if mb_plan is not None else 1
+    # Fig. 10-comparable static counts per executed step: microbatch chunks
+    # and (for afe_bucket) reduction buckets are the spawns; the step-end
+    # synchronisation is the join — escaped to the trainer's outer finish
+    # scope under DCAFE (one join per training run, not per step).
+    spawns_per_step = len(mb_plan.spawned) if mb_plan is not None else 0
+    if scfg.policy == "afe_bucket":
+        n_leaves = len(jax.tree.leaves(MDL.param_shapes(cfg)))
+        bplan = sched_pol.decide(0, n_leaves, sched_cap).plan
+        # serial arm (plan None) builds its buckets on the caller: 0 spawns
+        spawns_per_step += len(bplan.spawned) if bplan is not None else 0
+    sched_counts = {
+        "policy": sched_pol.name,
+        "spawns": spawns_per_step,
+        # nothing spawned (serial arm) → nothing to join; DCAFE escapes
+        # its join to the trainer's outer finish
+        "joins": 0 if (sched_pol.escape_join or spawns_per_step == 0)
+        else 1,
+        "mb_unroll": mb_unroll,
+        "escape_join": sched_pol.escape_join,
+    }
 
     def loss(params, mb):
         return MDL.loss_fn(params, cfg, mb, **fwd_kw)
@@ -168,7 +234,12 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
             if scfg.policy == "unopt":
                 grads = _constrain_tree(grads, _replicated_specs(grads))
         else:
-            grads, _ = jax.lax.scan(mb_body, zero, mbs)
+            # Microbatch accumulation runs in the chunks the policy
+            # planned: ``unroll`` bodies are in flight per scan step, so
+            # XLA can overlap their reduce-scatters (the spawned chunk);
+            # the remainder runs in the rolled tail (the caller's chunk).
+            grads, _ = jax.lax.scan(mb_body, zero, mbs,
+                                    unroll=min(mb_unroll, M))
         grads = jax.tree.map(lambda g: g / M, grads)
 
         # --- step-end synchronisation per policy -------------------------
@@ -181,15 +252,23 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
                 cfg, dp_shard=True)
             grads = _constrain_tree(grads, pspecs)
         elif scfg.policy == "afe_bucket":
-            flatten, unflatten = _bucketize(grads, scfg.n_buckets)
+            flatten, unflatten = _bucketize(grads, scfg.n_buckets,
+                                            policy=sched_pol,
+                                            capacity=sched_cap)
             buckets = flatten(jax.tree.leaves(grads))
             if scfg.grad_compress == "bf16":
                 buckets = [b.astype(jnp.bfloat16) for b in buckets]
             mesh = current_mesh()
             if mesh is not None:
+                # Flat buckets shard over EVERY mesh axis: a partially
+                # replicated spec here (e.g. data-only) makes the SPMD
+                # partitioner mis-reshard the mixed-sharding concat on
+                # some jax releases (observed: gradients exactly doubled
+                # on a (2,2) host mesh), and full flat sharding is the
+                # ZeRO-correct layout for a fused reduction payload.
                 buckets = [
                     jax.lax.with_sharding_constraint(
-                        b, NamedSharding(mesh, P(fsdp_axes())))
+                        b, NamedSharding(mesh, P(tuple(mesh.axis_names))))
                     for b in buckets
                 ]
             buckets = [b.astype(jnp.float32) for b in buckets]
@@ -204,6 +283,9 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
             params, grads, opt_state, ocfg)
         return new_params, new_state, metrics
 
+    # Static per-step schedule record: the trainer multiplies these by
+    # executed steps into its SchedTelemetry (Fig. 10 spawn/join JSON).
+    step.sched_counts = sched_counts
     return step, dp_shard
 
 

@@ -23,6 +23,7 @@ this host):
 
 from __future__ import annotations
 
+import sys
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -34,6 +35,7 @@ from ..ckpt.checkpoint import CheckpointManager
 from ..configs.base import ModelConfig, ShapeConfig
 from ..data.pipeline import DataConfig, SyntheticPipeline
 from ..models import model as MDL
+from ..sched import SchedTelemetry
 from .optimizer import AdamWConfig, init_opt_state
 from .train_step import StepConfig, build_train_step
 
@@ -48,6 +50,7 @@ class TrainerConfig:
     straggler_factor: float = 2.0
     failure_at: Optional[int] = None  # simulate a crash after this step
     seed: int = 0
+    ckpt_sched_policy: str = "dcafe"  # shard-write scheduling (repro.sched)
 
 
 @dataclass
@@ -58,6 +61,8 @@ class TrainReport:
     stragglers: int = 0
     resumed_from: Optional[int] = None
     completed: int = 0
+    #: Fig. 10-comparable per-surface spawn/join/latency telemetry
+    sched: dict = field(default_factory=dict)
 
 
 class SimulatedFailure(RuntimeError):
@@ -75,12 +80,18 @@ def run_training(cfg: ModelConfig, shape: ShapeConfig,
     report = TrainReport()
 
     step_fn, _ = build_train_step(cfg, shape, scfg, ocfg)
+    sched_counts = step_fn.sched_counts
     step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
     from .train_step import build_eval_loss
 
     eval_fn = jax.jit(build_eval_loss(cfg, scfg)) if eval_loss_hook else None
 
-    mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+    mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep,
+                            sched_policy=tcfg.ckpt_sched_policy)
+    # Train-step surface telemetry: the step's static schedule (microbatch
+    # chunks + reduction buckets, planned by scfg.sched_policy) counted per
+    # executed step; latencies are step wall times.
+    step_tel = SchedTelemetry()
     data = SyntheticPipeline(DataConfig(
         seq_len=shape.seq_len, global_batch=shape.global_batch,
         vocab=cfg.vocab, seed=tcfg.seed,
@@ -102,40 +113,75 @@ def run_training(cfg: ModelConfig, shape: ShapeConfig,
         opt_state = init_opt_state(params, ocfg)
 
     times: list = []
-    for step in range(start_step, tcfg.steps):
-        batch_np = data.batch_at(step)
-        batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
-        if cfg.family == "encdec":
-            batch["enc_frames"] = jax.numpy.zeros(
-                (shape.global_batch, cfg.enc_seq, cfg.d_model),
-                jax.numpy.bfloat16)
-        if cfg.family == "vlm":
-            batch["vis_embed"] = jax.numpy.zeros(
-                (shape.global_batch, cfg.vis_seq, cfg.d_model),
-                jax.numpy.bfloat16)
-        t0 = time.time()
-        if eval_fn is not None:
-            loss = float(eval_fn(params, batch))
-            report.losses.append(loss)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        jax.block_until_ready(metrics["grad_norm"])
-        dt = time.time() - t0
-        times.append(dt)
-        report.step_times.append(dt)
-        report.grad_norms.append(float(metrics["grad_norm"]))
-        # straggler detection
-        if len(times) >= 5:
-            med = float(np.median(times[-20:]))
-            if dt > tcfg.straggler_factor * med:
-                report.stragglers += 1
-        if (step + 1) % tcfg.ckpt_every == 0 or step + 1 == tcfg.steps:
-            mgr.save(step + 1,
-                     {"params": params, "opt": opt_state},
-                     blocking=(step + 1 == tcfg.steps))
-        report.completed = step + 1
-        if tcfg.failure_at is not None and step + 1 == tcfg.failure_at:
-            mgr.wait()
-            raise SimulatedFailure(f"injected failure after step {step+1}")
-    mgr.wait()
-    data.stop()
-    return report
+    try:
+        for step in range(start_step, tcfg.steps):
+            batch_np = data.batch_at(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+            if cfg.family == "encdec":
+                batch["enc_frames"] = jax.numpy.zeros(
+                    (shape.global_batch, cfg.enc_seq, cfg.d_model),
+                    jax.numpy.bfloat16)
+            if cfg.family == "vlm":
+                batch["vis_embed"] = jax.numpy.zeros(
+                    (shape.global_batch, cfg.vis_seq, cfg.d_model),
+                    jax.numpy.bfloat16)
+            t0 = time.time()
+            if eval_fn is not None:
+                loss = float(eval_fn(params, batch))
+                report.losses.append(loss)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["grad_norm"])
+            dt = time.time() - t0
+            times.append(dt)
+            report.step_times.append(dt)
+            step_tel.spawns += sched_counts["spawns"]
+            step_tel.joins += sched_counts["joins"]
+            # which arm executed the microbatches (run_loop semantics)
+            if sched_counts["spawns"] > 0:
+                step_tel.parallel_items += max(1, shape.microbatches)
+            else:
+                step_tel.serial_items += max(1, shape.microbatches)
+            step_tel.record_latency(dt)
+            report.grad_norms.append(float(metrics["grad_norm"]))
+            # straggler detection
+            if len(times) >= 5:
+                med = float(np.median(times[-20:]))
+                if dt > tcfg.straggler_factor * med:
+                    report.stragglers += 1
+            if (step + 1) % tcfg.ckpt_every == 0 or step + 1 == tcfg.steps:
+                mgr.save(step + 1,
+                         {"params": params, "opt": opt_state},
+                         blocking=(step + 1 == tcfg.steps))
+            elif mgr.pending:
+                # the previous step's save overlapped this step's compute;
+                # join + publish now so the durability gap is one step,
+                # not a whole checkpoint interval
+                mgr.wait()
+            report.completed = step + 1
+            if tcfg.failure_at is not None and step + 1 == tcfg.failure_at:
+                raise SimulatedFailure(
+                    f"injected failure after step {step+1}")
+        if sched_counts["escape_join"] and step_tel.spawns > 0:
+            step_tel.joins += 1  # DCAFE: the single outer finish of the run
+        report.sched = {
+            "train_step": dict(policy=sched_counts["policy"],
+                               mb_unroll=sched_counts["mb_unroll"],
+                               **step_tel.summary()),
+            "checkpoint": dict(policy=mgr.policy.name,
+                               **mgr.telemetry.summary()),
+        }
+        return report
+    finally:
+        # close() waits on (and publishes) any pending save, then shuts
+        # the I/O pool down — also on the failure-injection path.  If an
+        # exception is already propagating, a failed pending publish must
+        # not replace it (callers match on the primary error, e.g.
+        # SimulatedFailure); data.stop() always runs.
+        propagating = sys.exc_info()[0] is not None
+        try:
+            mgr.close()
+        except Exception:
+            if not propagating:
+                raise
+        finally:
+            data.stop()
