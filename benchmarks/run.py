@@ -9,6 +9,7 @@ One benchmark per paper table/figure plus the TPU-side analogues:
   sync       — HLO collectives per AFE sync policy          (Fig. 10 on TPU)
   moe        — DLBC vs LC MoE dispatch drop rates           (§3.2 on TPU)
   batcher    — DLBC continuous batching vs LC fixed batches (§3.2 serving)
+  tenants    — multi-tenant serving: weighted-DLBC isolation under bursts
   sched      — repro.sched policy ladder on the host pool (uniform/skewed)
   adoption   — sched adoption surfaces: train-step / checkpoint / MoE
                spawn-join telemetry + the DCAFE≤LC join regression gate
@@ -23,6 +24,7 @@ from . import (
     bench_adoption, bench_batcher, bench_design_choices, bench_fig10_counts,
     bench_fig11_speedup, bench_fig12_schemes, bench_fig13_energy,
     bench_moe_dispatch, bench_roofline, bench_sched, bench_sync_policy,
+    bench_tenants,
 )
 
 ALL = {
@@ -34,6 +36,7 @@ ALL = {
     "design": bench_design_choices.run,
     "moe": bench_moe_dispatch.run,
     "batcher": bench_batcher.run,
+    "tenants": bench_tenants.run,
     "sched": bench_sched.run,
     "sync": bench_sync_policy.run,
     "roofline": bench_roofline.run,

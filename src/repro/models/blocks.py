@@ -135,6 +135,11 @@ def layer_decode_apply(p: dict, cfg, x: jnp.ndarray, cache: dict,
 
     For windowed caches the write index wraps (ring buffer) and the
     attention window covers the whole buffer.
+
+    ``cache_index`` is a scalar (every row at the same position) or a
+    per-row ``(B,)`` vector — continuous batching tracks each decode
+    slot's position independently so a freshly refilled slot writes and
+    masks at ITS OWN position, not a neighbour's.
     """
     new_cache = dict(cache)
     if kind == "ssm":
@@ -147,8 +152,8 @@ def layer_decode_apply(p: dict, cfg, x: jnp.ndarray, cache: dict,
         a = L.cross_decode_apply(p["attn"], cfg, h, ctx_kv)
     else:
         T = cache["k"].shape[1]
-        idx = jnp.mod(cache_index, T) if cfg.sliding_window > 0 \
-            else cache_index
+        ci = jnp.asarray(cache_index, jnp.int32)
+        idx = jnp.mod(ci, T) if cfg.sliding_window > 0 else ci
         window = 0 if cfg.sliding_window > 0 else 0  # ring buffer = window
         # In the ring buffer every entry is valid once full; effective
         # index for masking is min(cache_index+1, T).
@@ -160,14 +165,12 @@ def layer_decode_apply(p: dict, cfg, x: jnp.ndarray, cache: dict,
         v = L.dense_apply(p_attn["wv"], h).reshape(
             x.shape[0], 1, cfg.n_kv_heads, cfg.head_dim)
         if cfg.rope_theta > 0:
-            pos = jnp.full((x.shape[0], 1), cache_index, dtype=jnp.int32)
+            pos = L.decode_positions(ci, x.shape[0])
             q = L.apply_rope(q, pos, cfg.rope_theta)
             k = L.apply_rope(k, pos, cfg.rope_theta)
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
-        valid = jnp.minimum(cache_index + 1, T)
+        kc = L.kv_cache_update(cache["k"], k, idx)
+        vc = L.kv_cache_update(cache["v"], v, idx)
+        valid = jnp.minimum(ci + 1, T)
         a = L.decode_attention(q, kc, vc, valid, window=0)
         a = L.dense_apply(p_attn["wo"], a.reshape(x.shape[0], 1, -1))
         new_cache["k"], new_cache["v"] = kc, vc

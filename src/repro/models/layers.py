@@ -347,11 +347,17 @@ def decode_attention(
     q: jnp.ndarray,        # (B, 1, H, dh)
     k_cache: jnp.ndarray,  # (B, T, KV, dh)
     v_cache: jnp.ndarray,
-    cache_index: jnp.ndarray,  # () int32 — number of valid cache entries
+    cache_index: jnp.ndarray,  # () or (B,) int32 — valid cache entries
     *,
     window: int = 0,
 ) -> jnp.ndarray:
-    """One-token attention against a (possibly windowed) KV cache."""
+    """One-token attention against a (possibly windowed) KV cache.
+
+    ``cache_index`` may be a scalar (every row at the same position —
+    training-style decode) or per-row ``(B,)`` (continuous batching,
+    where a freshly refilled slot sits at position 0 while its
+    neighbours are deep into their sequences).
+    """
     B, _, H, dh = q.shape
     T, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
@@ -359,9 +365,12 @@ def decode_attention(
     s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
                    preferred_element_type=jnp.float32) * dh ** -0.5
     pos = jnp.arange(T)
-    mask = pos[None, :] < cache_index
+    ci = jnp.asarray(cache_index)
+    if ci.ndim == 0:
+        ci = jnp.full((B,), ci)
+    mask = pos[None, :] < ci[:, None]                       # (B, T)
     if window > 0:
-        mask = mask & (pos[None, :] >= cache_index - window)
+        mask = mask & (pos[None, :] >= ci[:, None] - window)
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
@@ -449,12 +458,41 @@ def attn_apply(
     return dense_apply(p["wo"], out.reshape(B, S, H * h))
 
 
+def decode_positions(cache_index, B: int) -> jnp.ndarray:
+    """Normalise a scalar-or-``(B,)`` cache index to per-row positions
+    ``(B, 1)`` (rope / masking)."""
+    ci = jnp.asarray(cache_index, jnp.int32)
+    if ci.ndim == 0:
+        return jnp.full((B, 1), ci, dtype=jnp.int32)
+    return ci[:, None]
+
+
+def kv_cache_update(cache_arr: jnp.ndarray, new: jnp.ndarray,
+                    idx) -> jnp.ndarray:
+    """Write a one-token K/V slice ``new`` (B, 1, KV, h) into the cache at
+    ``idx`` — a scalar (every row at the same position) or per-row
+    ``(B,)`` (continuous batching: each slot writes at ITS OWN position,
+    so a refill mid-decode cannot clobber or land past a neighbour)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache_arr, new.astype(cache_arr.dtype), idx, axis=1)
+    B, T = cache_arr.shape[0], cache_arr.shape[1]
+    # match the scalar path's overflow semantics: dynamic_update_slice
+    # clamps to the last position, whereas an out-of-bounds scatter
+    # under jit silently DROPS the write — clamp so both paths overwrite
+    # position T-1 when a caller runs past the cache
+    idx = jnp.minimum(idx, T - 1)
+    return cache_arr.at[jnp.arange(B), idx].set(
+        new[:, 0].astype(cache_arr.dtype))
+
+
 def attn_decode_apply(
     p: dict, cfg, x: jnp.ndarray, cache: dict, cache_index,
     *, layer_window: int = -1,
 ) -> tuple:
     """One-token decode; cache = {"k": (B,T,KV,h), "v": ...}. Returns
-    (out, new_cache)."""
+    (out, new_cache).  ``cache_index`` scalar or per-row ``(B,)``."""
     B, _, d = x.shape
     H, KV, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     window = cfg.sliding_window if layer_window < 0 else layer_window
@@ -462,14 +500,13 @@ def attn_decode_apply(
     k = dense_apply(p["wk"], x).reshape(B, 1, KV, h)
     v = dense_apply(p["wv"], x).reshape(B, 1, KV, h)
     if cfg.rope_theta > 0:
-        pos = jnp.full((B, 1), cache_index, dtype=jnp.int32)
+        pos = decode_positions(cache_index, B)
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
-    out = decode_attention(q, k_cache, v_cache, cache_index + 1, window=window)
+    k_cache = kv_cache_update(cache["k"], k, cache_index)
+    v_cache = kv_cache_update(cache["v"], v, cache_index)
+    out = decode_attention(q, k_cache, v_cache,
+                           jnp.asarray(cache_index) + 1, window=window)
     y = dense_apply(p["wo"], out.reshape(B, 1, H * h))
     return y, {"k": k_cache, "v": v_cache}
 

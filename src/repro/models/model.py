@@ -285,8 +285,9 @@ def decode_step(params: dict, cfg: ModelConfig, cache: dict,
                 batch: dict) -> tuple:
     """One token for every sequence in the batch against the cache.
 
-    batch = {"tokens": (B, 1), "cache_index": ()} — returns
-    (logits (B, vocab), new_cache).
+    batch = {"tokens": (B, 1), "cache_index": () or (B,)} — returns
+    (logits (B, vocab), new_cache).  A per-row cache index lets the
+    continuous batcher keep each decode slot at its own position.
     """
     tokens, cache_index = batch["tokens"], batch["cache_index"]
     x = jnp.take(params["embed"], tokens, axis=0)

@@ -17,6 +17,9 @@ every execution surface in the repo:
 * :mod:`repro.sched.executors` — ``ThreadExecutor`` (host thread pool,
   with a work-stealing variant) and ``SlotExecutor`` (device-slot
   admission for the serving batcher);
+* :mod:`repro.sched.tenancy` — multi-tenant admission: per-tenant
+  queues (``TenantRegistry``) and weighted deficit-round-robin refill
+  (``WeightedRefillPolicy``, ``"wdlbc"``) over one slot executor;
 * :mod:`repro.sched.telemetry` — Fig. 10-style spawn/join counters plus
   latency distributions (p50/p99) emitted as JSON for the benchmarks.
 
@@ -34,6 +37,9 @@ from .policy import (  # noqa: F401
     DCAFE, DLBC, LC, POLICIES, ChunkPlan, Decision, SchedPolicy, Serial,
     chunk_plan, fig6_chunk_end, fig6_eq, fig6_next, fig6_rem0, fig6_tot,
     get_policy, static_chunk_size, static_plan,
+)
+from .tenancy import (  # noqa: F401
+    TenantQueue, TenantRegistry, WeightedRefillPolicy, ensure_weighted,
 )
 from .executors import (  # noqa: F401
     FinishScope, SlotExecutor, ThreadExecutor, WorkStealingExecutor,

@@ -19,11 +19,12 @@ import queue
 import threading
 import time
 from collections import deque
-from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .capacity import PoolCapacity, SlotCapacity
 from .policy import SchedPolicy, get_policy
 from .telemetry import SchedTelemetry
+from .tenancy import TenantRegistry, ensure_weighted
 
 
 class FinishScope:
@@ -42,7 +43,8 @@ class FinishScope:
             ev.wait()
         self._events.clear()
         if self.telemetry is not None:
-            self.telemetry.joins += 1
+            with self.telemetry.lock:
+                self.telemetry.joins += 1
 
     def __enter__(self):
         return self
@@ -94,15 +96,31 @@ class ThreadExecutor:
                 self._idle -= 1
             try:
                 fn()
+            except Exception:
+                # Contain task exceptions: the worker thread survives, the
+                # done event still fires, so joins (and FinishScope) never
+                # hang on a raising task.  Uncontained, the exception would
+                # silently kill the thread and shrink the pool forever.
+                with self.telemetry.lock:
+                    self.telemetry.errors += 1
             finally:
                 with self._idle_lock:
                     self._idle += 1
+                with self.telemetry.lock:
+                    self.telemetry.completions += 1
                 done.set()
 
     def _submit(self, fn: Callable[[], None]) -> threading.Event:
         ev = threading.Event()
+        with self.telemetry.lock:
+            self.telemetry.spawns += 1
         self._q.put((fn, ev))
         return ev
+
+    def submit(self, fn: Callable[[], None]) -> threading.Event:
+        """Public single-task entry point (dispatches through the
+        subclass's ``_submit``); same spawn accounting as ``run_loop``."""
+        return self._submit(fn)
 
     def idle_workers(self) -> int:
         return self._idle  # intentionally unlocked read
@@ -126,6 +144,13 @@ class ThreadExecutor:
         picks the parallel arm (spawn the planned chunks, run the caller
         chunk here, join — or escape the join into ``scope`` for DCAFE)
         or the serial arm (one item at a time, re-probing capacity).
+
+        Exception contract: every SPAWNED item is attempted — an item
+        whose ``fn`` raises is counted in ``telemetry.errors`` and the
+        rest of its chunk still runs (without per-item containment a
+        raise would silently drop the chunk's remaining items).  Items
+        executed on the CALLING thread (the caller's chunk, the serial
+        block) propagate like a plain ``for`` loop.
         """
         policy = get_policy(policy, default="dlbc")
         t = self.telemetry
@@ -136,10 +161,11 @@ class ThreadExecutor:
             t0 = time.perf_counter()
             fn(items[j])
             t.record_latency(time.perf_counter() - t0)
-            if serial:
-                t.serial_items += 1
-            else:
-                t.parallel_items += 1
+            with t.lock:
+                if serial:
+                    t.serial_items += 1
+                else:
+                    t.parallel_items += 1
 
         while i < n:
             decision = policy.decide(i, n, self.capacity)
@@ -154,12 +180,18 @@ class ThreadExecutor:
                         def task(a=a, b=b):
                             for j in range(a, b):
                                 t0 = time.perf_counter()
-                                fn(items[j])
-                                t.record_latency(time.perf_counter() - t0)
+                                try:
+                                    fn(items[j])
+                                except Exception:
+                                    with t.lock:
+                                        t.errors += 1
+                                finally:
+                                    t.record_latency(
+                                        time.perf_counter() - t0)
 
                         events.append(self._submit(task))
-                        t.spawns += 1
-                        t.parallel_items += b - a
+                        with t.lock:
+                            t.parallel_items += b - a
                 # parent block: the caller's (smallest) chunk
                 for j in range(*plan.caller):
                     run_item(j, serial=False)
@@ -168,7 +200,8 @@ class ThreadExecutor:
                 else:
                     for ev in events:
                         ev.wait()
-                    t.joins += 1
+                    with t.lock:
+                        t.joins += 1
                 return
             # serial block with periodic capacity re-probe (cadence counts
             # items processed in THIS block, not the absolute index)
@@ -240,13 +273,21 @@ class WorkStealingExecutor(ThreadExecutor):
             fn, done = item
             try:
                 fn()
+            except Exception:
+                # same containment contract as ThreadExecutor._worker
+                with self.telemetry.lock:
+                    self.telemetry.errors += 1
             finally:
                 with self._cv:
                     self._idle += 1
+                with self.telemetry.lock:
+                    self.telemetry.completions += 1
                 done.set()
 
     def _submit(self, fn: Callable[[], None]) -> threading.Event:
         ev = threading.Event()
+        with self.telemetry.lock:
+            self.telemetry.spawns += 1
         with self._cv:
             self._deques[self._rr % self.n_workers].append((fn, ev))
             self._rr += 1
@@ -268,6 +309,14 @@ class SlotExecutor:
     waits for a full batch of free slots (static chunking of requests).
     Refills are FIFO with oldest request → lowest slot index — the
     remainder-spread priority of Fig. 6.
+
+    ``refill`` accepts either a plain FIFO list (the single-queue serving
+    path, unchanged) or a :class:`~repro.sched.tenancy.TenantRegistry`:
+    the policy still decides *how many* requests the idle slots admit,
+    and the weighted deficit-round-robin decides *which tenant* each
+    admission comes from.  The executor keeps per-tenant occupancy
+    (``slot_tenant``) so slot-share accounting and the per-tenant
+    spawn/join telemetry stay with the one object that owns the slots.
     """
 
     def __init__(self, n_slots: int,
@@ -276,23 +325,78 @@ class SlotExecutor:
         self.n_slots = n_slots
         self.policy = get_policy(policy)
         self.telemetry = telemetry or SchedTelemetry()
+        #: which tenant occupies each slot (None = idle / anonymous)
+        self.slot_tenant: List[Optional[str]] = [None] * n_slots
+        self._weighted: Optional[Any] = None  # lazily wrapped policy
 
-    def refill(self, slots: Sequence[Optional[Any]],
-               queue: List) -> List[Tuple[int, Any]]:
-        """Pop up to ``policy.admit(...)`` requests and pair them with idle
-        slots (oldest request → lowest slot).  Mutates ``queue``."""
-        cap = SlotCapacity(list(slots))
-        idle = cap.idle_indices()
+    def _admit_count(self, n_idle: int, n_queued: int) -> int:
         # clamp: a custom policy may over-admit; never index past the idle
         # slots or pop an empty queue
-        k = min(self.policy.admit(len(idle), len(queue), self.n_slots),
-                len(idle), len(queue))
+        return min(self.policy.admit(n_idle, n_queued, self.n_slots),
+                   n_idle, n_queued)
+
+    def refill(self, slots: Sequence[Optional[Any]],
+               queue: Union[List, TenantRegistry]) -> List[Tuple[int, Any]]:
+        """Pop up to ``policy.admit(...)`` requests and pair them with idle
+        slots (oldest request → lowest slot).  Mutates ``queue``."""
+        if isinstance(queue, TenantRegistry):
+            return self.refill_tenants(slots, queue)
+        cap = SlotCapacity(list(slots))
+        idle = cap.idle_indices()
+        k = self._admit_count(len(idle), len(queue))
         placements = [(idle[j], queue.pop(0)) for j in range(k)]
-        self.telemetry.spawns += len(placements)
+        with self.telemetry.lock:
+            self.telemetry.spawns += len(placements)
         return placements
 
-    def complete(self, latency_steps: Optional[float] = None):
-        """A sequence finished: count the join (finish analogue)."""
-        self.telemetry.joins += 1
+    def weighted_policy(self):
+        """Resolve (and cache) the cross-tenant refill policy.  Raises
+        for escape-join bases (DCAFE) — call at configuration time to
+        fail fast rather than on the first mid-run refill."""
+        if self._weighted is None:
+            self._weighted = ensure_weighted(self.policy)
+        return self._weighted
+
+    def refill_tenants(self, slots: Sequence[Optional[Any]],
+                       registry: TenantRegistry) -> List[Tuple[int, Any]]:
+        """Tenant-aware refill: the base policy's idle-slot arithmetic
+        sizes the admission, the deficit round-robin picks the tenants.
+        Returns ``(slot, request)`` pairs; ``slot_tenant`` and the
+        per-tenant spawn counters record who got each slot."""
+        pol = self.weighted_policy()
+        cap = SlotCapacity(list(slots))
+        idle = cap.idle_indices()
+        k = self._admit_count(len(idle), registry.total_queued())
+        placements: List[Tuple[int, Any]] = []
+        for j, (tenant, req) in enumerate(pol.pick(registry, k)):
+            slot = idle[j]
+            self.slot_tenant[slot] = tenant.name
+            self.telemetry.tenant(tenant.name).spawns += 1
+            placements.append((slot, req))
+        with self.telemetry.lock:
+            self.telemetry.spawns += len(placements)
+        return placements
+
+    def tenant_busy_slots(self) -> Dict[str, int]:
+        """Occupied-slot count per tenant right now (slot-share
+        accounting: the serving stats integrate this every step)."""
+        out: Dict[str, int] = {}
+        for name in self.slot_tenant:
+            if name is not None:
+                out[name] = out.get(name, 0) + 1
+        return out
+
+    def complete(self, latency_steps: Optional[float] = None,
+                 slot: Optional[int] = None):
+        """A sequence finished: count the join (finish analogue); with a
+        ``slot`` the tenant occupancy is released and the join lands on
+        that tenant's counters too."""
+        with self.telemetry.lock:
+            self.telemetry.joins += 1
+        if slot is not None:
+            name = self.slot_tenant[slot]
+            if name is not None:
+                self.telemetry.tenant(name).joins += 1
+            self.slot_tenant[slot] = None
         if latency_steps is not None:
             self.telemetry.record_latency(latency_steps)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import json
 import math
+import threading
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, Iterable, List
@@ -59,9 +60,25 @@ class SchedTelemetry(SchedCounters):
     serial_items: int = 0     # items run in the serial fallback block
     parallel_items: int = 0   # items run inside spawned/caller chunks
     steals: int = 0           # work-stealing executor only
+    completions: int = 0      # spawned tasks that finished (quiescence:
+    #                           completions == spawns once every join fired)
+    errors: int = 0           # spawned tasks that raised (contained by the
+    #                           worker — the thread survives, the done event
+    #                           still fires, the join never hangs)
+    #: per-tenant spawn/join counters (multi-tenant serving); keys are
+    #: tenant names, values share the Fig. 10 counter vocabulary.  The
+    #: conservation invariant — sum of per-tenant spawns/joins equals the
+    #: global counters — is gated in CI (bench_tenants).
+    tenants: Dict[str, SchedCounters] = field(default_factory=dict)
     #: most recent samples only (bounded window — see LATENCY_WINDOW)
     latencies: Deque[float] = field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+    #: guards counter increments that can race (several producer threads
+    #: sharing one executor — the stress tests drive exactly that).  The
+    #: latency path stays lock-free; single-threaded surfaces never
+    #: contend on it.
+    lock: threading.Lock = field(default_factory=threading.Lock,
+                                 repr=False, compare=False)
 
     # Back-compat aliases for the pre-sched ``PoolStats`` field names.
     @property
@@ -71,6 +88,23 @@ class SchedTelemetry(SchedCounters):
     @tasks_spawned.setter
     def tasks_spawned(self, v: int):
         self.spawns = v
+
+    def tenant(self, name: str) -> SchedCounters:
+        """The per-tenant counter bucket for ``name`` (created on first
+        use).  Only ever touched from the scheduling thread, like the
+        global counters."""
+        bucket = self.tenants.get(name)
+        if bucket is None:
+            bucket = self.tenants[name] = SchedCounters()
+        return bucket
+
+    def tenant_totals(self) -> Dict[str, int]:
+        """Sums of the per-tenant counters — CI gates these against the
+        globals (telemetry conservation)."""
+        return dict(
+            spawns=sum(c.spawns for c in self.tenants.values()),
+            joins=sum(c.joins for c in self.tenants.values()),
+        )
 
     def record_latency(self, seconds: float):
         self.latencies.append(seconds)  # GIL-atomic, no lock on the hot path
@@ -90,7 +124,7 @@ class SchedTelemetry(SchedCounters):
 
     def summary(self) -> Dict:
         """Flat dict for benchmark tables / JSON artifacts."""
-        return dict(
+        out = dict(
             spawns=self.spawns,
             joins=self.joins,
             barriers=self.barriers,
@@ -101,6 +135,12 @@ class SchedTelemetry(SchedCounters):
             p50_ms=round(self.p50() * 1e3, 3),
             p99_ms=round(self.p99() * 1e3, 3),
         )
+        if self.tenants:  # only multi-tenant surfaces grow the extra key
+            out["tenants"] = {
+                name: dict(spawns=c.spawns, joins=c.joins)
+                for name, c in sorted(self.tenants.items())
+            }
+        return out
 
     def to_json(self) -> str:
         return json.dumps(self.summary(), indent=1)
@@ -109,4 +149,6 @@ class SchedTelemetry(SchedCounters):
         self.spawns = self.joins = self.barriers = self.steps = 0
         self.work = 0.0
         self.serial_items = self.parallel_items = self.steals = 0
+        self.completions = self.errors = 0
+        self.tenants = {}
         self.latencies = deque(maxlen=LATENCY_WINDOW)  # atomic rebind

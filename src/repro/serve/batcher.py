@@ -16,18 +16,39 @@ until a full batch accumulates, run it to completion, then take the next
 batch (static chunking of requests).  The benchmark measures mean/p99
 latency and slot utilisation for both.
 
+Multi-tenant serving (``policy="wdlbc"`` or a ``tenants=`` weight map)
+keeps the SAME slot arithmetic over ONE :class:`SlotExecutor` and layers
+per-tenant queues on top: the base policy still sizes each refill to the
+idle-slot count, and a weighted deficit-round-robin
+(:class:`repro.sched.tenancy.WeightedRefillPolicy`) picks *which tenant*
+each freed slot goes to.  With a single tenant the admission trace is
+step-for-step identical to plain DLBC (pinned by
+``tests/test_serve_regression.py``).
+
 The admission decision itself lives in :mod:`repro.sched` (the shared
 policy engine): this module delegates slot refill to
 :class:`repro.sched.executors.SlotExecutor`, whose telemetry counts
 admissions as spawns and completed sequences as joins (Fig. 10
-analogues) alongside latency distributions.
+analogues) alongside latency distributions — per tenant as well as
+globally, with the conservation invariant (per-tenant sums == globals)
+gated in CI.
+
+Cache positions are tracked PER SLOT and passed to ``decode_step`` as a
+``(n_slots,)`` vector: a freshly refilled slot decodes against ITS OWN
+position 0 while its neighbours keep decoding at theirs.  (The previous
+scheme shared one ``max(slot_pos)`` index across the batch, so a refill
+mid-decode wrote the new request's KV at the old request's position and
+attended over stale entries — see the refill-mid-decode regression
+test.)  Attention-family caches are fully isolated by the per-slot
+index + validity mask; SSM/hybrid recurrent state is not position-
+indexed and would additionally need a per-slot state reset on refill —
+the serving path is exercised with attention families.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +58,8 @@ from ..configs.base import ModelConfig
 from ..models import model as MDL
 from ..sched.executors import SlotExecutor
 from ..sched.policy import SchedPolicy
+from ..sched.telemetry import percentile
+from ..sched.tenancy import TenantRegistry, WeightedRefillPolicy
 
 
 @dataclass
@@ -48,6 +71,7 @@ class Request:
     start_step: Optional[int] = None
     done_step: Optional[int] = None
     tokens: list = field(default_factory=list)
+    tenant: str = "default"
 
 
 @dataclass
@@ -62,49 +86,117 @@ class ServeStats:
     def utilization(self) -> float:
         return self.busy_slot_steps / max(1, self.total_slot_steps)
 
+    @property
+    def p50_latency(self) -> float:
+        return percentile(self.latencies, 50)
+
+    @property
+    def p99_latency(self) -> float:
+        return percentile(self.latencies, 99)
+
+    def summary(self) -> Dict:
+        return dict(steps=self.steps, utilization=round(self.utilization, 4),
+                    n_done=len(self.latencies),
+                    p50_latency=self.p50_latency,
+                    p99_latency=self.p99_latency,
+                    mean_queue_wait=(float(np.mean(self.queue_waits))
+                                     if self.queue_waits else 0.0))
+
 
 class ContinuousBatcher:
     """Step-synchronous simulator of the serving loop (decode steps are the
     clock — on hardware each step is one ``serve_step`` launch)."""
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 cache_len: int = 256, policy: str = "dlbc"):
-        assert isinstance(policy, SchedPolicy) or policy in ("dlbc", "lc")
+                 cache_len: int = 256,
+                 policy: Union[str, SchedPolicy] = "dlbc",
+                 tenants: Optional[Dict[str, float]] = None):
+        assert isinstance(policy, SchedPolicy) \
+            or policy in ("dlbc", "lc", "wdlbc")
+        if cfg.family in ("ssm", "hybrid"):
+            # The per-slot cache index isolates attention KV across a
+            # refill, but SSM/hybrid recurrent state is not position-
+            # indexed: a refilled slot would consume the previous
+            # occupant's conv/SSM state.  Refuse loudly rather than
+            # decode corrupted tokens; serving recurrent families needs
+            # a per-slot state reset on refill first.
+            raise NotImplementedError(
+                f"ContinuousBatcher does not support recurrent cache "
+                f"families yet (family={cfg.family!r}): slot refill "
+                f"would leak SSM state between requests")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.sched = SlotExecutor(n_slots, policy=policy)
         self.policy = self.sched.policy.name
+        # tenant mode: explicit weights, or any weighted-refill policy
+        self.registry: Optional[TenantRegistry] = None
+        if tenants is not None \
+                or isinstance(self.sched.policy, WeightedRefillPolicy):
+            self.registry = TenantRegistry(tenants or {"default": 1.0})
+            # resolve the refill wrapper NOW so an invalid base policy
+            # (escape-join) fails at construction, not mid-run
+            self.sched.weighted_policy()
+            if not isinstance(self.sched.policy, WeightedRefillPolicy):
+                # refill wraps the base policy in the deficit round-robin;
+                # label the run accordingly ("wdlbc", "wlc", ...)
+                self.policy = f"w{self.policy}"
         self.cache = MDL.init_cache(cfg, n_slots, cache_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
-        self.queue: List[Request] = []
+        self.queue: List[Request] = []   # single-queue (anonymous) mode
         self.stats = ServeStats()
+        self.tenant_stats: Dict[str, ServeStats] = {}
+        if self.registry is not None:
+            for name in self.registry.names():
+                self.tenant_stats[name] = ServeStats()
+        #: admission trace: (step, slot, rid, tenant) per placement — the
+        #: golden-file surface of the regression tests
+        self.admissions: List[Tuple[int, int, int, str]] = []
         self._decode = jax.jit(
             lambda p, c, b: MDL.decode_step(p, cfg, c, b))
 
-    # -- admission (DLBC vs LC) ----------------------------------------------
+    # -- admission (DLBC vs LC vs weighted-DLBC) -----------------------------
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    def submit(self, req: Request, tenant: Optional[str] = None):
+        """Queue a request.  ``tenant`` overrides ``req.tenant``; in
+        single-queue mode tenant labels are carried but not scheduled on."""
+        if tenant is not None:
+            req.tenant = tenant
+        if self.registry is not None:
+            self.registry.submit(req, req.tenant)
+            if req.tenant not in self.tenant_stats:
+                self.tenant_stats[req.tenant] = ServeStats()
+        else:
+            self.queue.append(req)
+
+    def queued(self) -> int:
+        return (self.registry.total_queued() if self.registry is not None
+                else len(self.queue))
 
     def _admit(self, now: int):
         # Delegated to the shared policy engine: DLBC fills every idle
-        # slot at every step; LC only starts a full batch together.
-        for slot, req in self.sched.refill(self.slot_req, self.queue):
+        # slot at every step; LC only starts a full batch together; the
+        # weighted deficit-round-robin arbitrates across tenant queues.
+        backlog = self.registry if self.registry is not None else self.queue
+        for slot, req in self.sched.refill(self.slot_req, backlog):
             self._place(slot, req, now)
 
     def _place(self, slot: int, req: Request, now: int):
         req.start_step = now
-        self.stats.queue_waits.append(now - req.arrive_step)
+        wait = now - req.arrive_step
+        self.stats.queue_waits.append(wait)
+        if self.registry is not None:
+            self.tenant_stats[req.tenant].queue_waits.append(wait)
+        self.admissions.append((now, slot, req.rid, req.tenant))
         self.slot_req[slot] = req
         # prefill approximated token-by-token for simplicity of the
         # simulator; prompt tokens replay through decode_step
         self.slot_pos[slot] = 0
         req.tokens = list(req.prompt)
 
-    # -- one decode step across all slots ---------------------------------------
+    # -- one decode step across all slots ------------------------------------
 
     def step(self, now: int):
         self._admit(now)
@@ -112,15 +204,22 @@ class ContinuousBatcher:
         self.stats.total_slot_steps += self.n_slots
         self.stats.busy_slot_steps += len(active)
         self.stats.steps += 1
+        for st in self.tenant_stats.values():
+            st.total_slot_steps += self.n_slots
+            st.steps += 1
+        # slot-share accounting off the executor's tenant occupancy map
+        # (set at refill, cleared at complete)
+        for name, n_busy in self.sched.tenant_busy_slots().items():
+            self.tenant_stats[name].busy_slot_steps += n_busy
         if not active:
             return
         tokens = np.zeros((self.n_slots, 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slot_req[i].tokens[-1] % self.cfg.vocab
-        # All slots share a cache index in this static-shape step; per-slot
-        # positions are tracked host-side and the cache is slot-major.
-        cache_index = jnp.asarray(int(max(self.slot_pos[i] for i in active)),
-                                  jnp.int32)
+        # Per-slot cache positions: each slot writes/attends at ITS OWN
+        # index, so a freshly refilled slot (pos 0) is isolated from a
+        # neighbour deep into its sequence (refill-mid-decode safety).
+        cache_index = jnp.asarray(self.slot_pos, jnp.int32)
         logits, self.cache = self._decode(
             self.params, self.cache,
             {"tokens": jnp.asarray(tokens), "cache_index": cache_index})
@@ -134,17 +233,35 @@ class ContinuousBatcher:
                 r.done_step = now
                 # latencies live in ServeStats (the serving-facing record);
                 # telemetry only counts the join so Fig. 10 comparisons hold
-                self.stats.latencies.append(now - r.arrive_step)
-                self.sched.complete()
+                lat = now - r.arrive_step
+                self.stats.latencies.append(lat)
+                ts = self.tenant_stats.get(r.tenant)
+                if ts is not None:
+                    ts.latencies.append(lat)
+                self.sched.complete(slot=i)
                 self.slot_req[i] = None
                 self.slot_pos[i] = 0
 
+    # -- driving --------------------------------------------------------------
+
+    def slot_shares(self) -> Dict[str, float]:
+        """Fraction of occupied slot-time each tenant received — compare
+        against the weight shares for the isolation claim."""
+        busy = max(1, self.stats.busy_slot_steps)
+        return {name: st.busy_slot_steps / busy
+                for name, st in sorted(self.tenant_stats.items())}
+
     def run(self, requests: List[Request], max_steps: int = 10_000):
-        for r in requests:
-            self.submit(r)
-        now = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
+        """Drive the clock, injecting each request at its ``arrive_step``
+        (stable order for simultaneous arrivals)."""
+        pending = sorted(requests, key=lambda r: r.arrive_step)
+        now, nxt = 0, 0
+        while (nxt < len(pending) or self.queued()
+               or any(r is not None for r in self.slot_req)) \
                 and now < max_steps:
+            while nxt < len(pending) and pending[nxt].arrive_step <= now:
+                self.submit(pending[nxt])
+                nxt += 1
             self.step(now)
             now += 1
         return self.stats

@@ -1,0 +1,169 @@
+"""Deterministic stress tests for ThreadExecutor / WorkStealingExecutor +
+FinishScope: N producer threads × M tasks, with injected exceptions.
+
+These guard the AFE CI gate from flaking: the gate counts spawns/joins at
+quiescence, so a lost task, a silently-dead worker thread, or a racy
+counter increment shows up there as a phantom regression.  Invariants:
+
+* exactly ONE join per finish scope (the aggressive-finish-elimination
+  contract), even when tasks raise;
+* no lost task — every submitted task's done event fires, every item of
+  every concurrent ``run_loop`` executes exactly once;
+* telemetry conservation at quiescence — ``spawns == completions``
+  (every spawned task finished), ``errors`` counts exactly the injected
+  raises, and the pool's idle count returns to ``n_workers``;
+* the pool stays functional after exceptions (workers survive — before
+  containment, a raising task silently killed its worker thread and
+  every later join of a full pool would hang).
+
+Deterministic: fixed producer/task counts and injection pattern; the only
+waits are bounded event waits on work the pool must finish.
+"""
+
+import threading
+
+import pytest
+
+from repro.sched import ThreadExecutor, WorkStealingExecutor
+
+EXECUTORS = [ThreadExecutor, WorkStealingExecutor]
+N_PRODUCERS = 4
+M_TASKS = 60
+RAISE_EVERY = 5  # every 5th injected task raises
+
+
+def _run_producers(target):
+    threads = [threading.Thread(target=target, args=(p,))
+               for p in range(N_PRODUCERS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "producer deadlocked"
+
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_concurrent_run_loops_lose_no_items(cls):
+    """N producers drive run_loop on ONE shared pool, each under its own
+    DCAFE finish scope: every item runs exactly once, one join per
+    scope, and spawns == completions at quiescence."""
+    ex = cls(n_workers=3)
+    try:
+        lock = threading.Lock()
+        seen = []
+
+        def produce(p):
+            items = [(p, i) for i in range(M_TASKS)]
+
+            def fn(item):
+                with lock:
+                    seen.append(item)
+
+            with ex.finish() as scope:
+                ex.run_loop(items, fn, policy="dcafe", scope=scope)
+
+        _run_producers(produce)
+        assert sorted(seen) == sorted(
+            (p, i) for p in range(N_PRODUCERS) for i in range(M_TASKS))
+        t = ex.telemetry
+        assert t.joins == N_PRODUCERS          # exactly one per scope
+        assert t.completions == t.spawns       # quiescence conservation
+        assert t.errors == 0
+        assert t.serial_items + t.parallel_items == N_PRODUCERS * M_TASKS
+        assert ex.idle_workers() == ex.n_workers
+    finally:
+        ex.shutdown()
+
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_injected_exceptions_lose_no_tasks_and_kill_no_workers(cls):
+    """N producers submit M tasks each; every RAISE_EVERY-th raises.
+    All done events fire, errors are counted exactly, and the pool still
+    schedules (workers survived containment)."""
+    ex = cls(n_workers=3)
+    try:
+        lock = threading.Lock()
+        ran = []
+        events = {}
+
+        def produce(p):
+            evs = []
+            for i in range(M_TASKS):
+                def task(p=p, i=i):
+                    with lock:
+                        ran.append((p, i))
+                    if i % RAISE_EVERY == 0:
+                        raise ValueError(f"injected {p}/{i}")
+
+                evs.append(ex.submit(task))
+            with lock:
+                events[p] = evs
+
+        _run_producers(produce)
+        for p, evs in events.items():
+            for i, ev in enumerate(evs):
+                assert ev.wait(timeout=30), f"lost task {p}/{i}"
+        t = ex.telemetry
+        n_total = N_PRODUCERS * M_TASKS
+        n_raised = N_PRODUCERS * len(range(0, M_TASKS, RAISE_EVERY))
+        assert sorted(ran) == sorted(
+            (p, i) for p in range(N_PRODUCERS) for i in range(M_TASKS))
+        assert t.spawns == n_total
+        assert t.completions == n_total        # raising tasks complete too
+        assert t.errors == n_raised
+        assert ex.idle_workers() == ex.n_workers  # nobody died mid-task
+
+        # the pool is still fully functional: a post-stress loop with a
+        # finish scope joins promptly (pre-containment this hung once
+        # enough workers had been killed by raises)
+        done = []
+        with ex.finish() as scope:
+            ex.run_loop(list(range(10)), done.append, policy="dcafe",
+                        scope=scope)
+        assert sorted(done) == list(range(10))
+        assert t.joins == 1  # the one scope join above
+    finally:
+        ex.shutdown()
+
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_run_loop_spawned_chunk_survives_raising_item(cls):
+    """An item raising inside a spawned chunk must not drop the chunk's
+    remaining items: every spawned item is attempted, raises are counted
+    in telemetry.errors.  (LC spawns every chunk, so no caller-side
+    items propagate here.)"""
+    ex = cls(n_workers=2)
+    try:
+        lock = threading.Lock()
+        attempted = []
+
+        def fn(i):
+            with lock:
+                attempted.append(i)
+            if i % 3 == 0:
+                raise ValueError(f"injected {i}")
+
+        ex.run_loop(list(range(30)), fn, policy="lc")
+        assert sorted(attempted) == list(range(30))  # nothing dropped
+        assert ex.telemetry.errors == len(range(0, 30, 3))
+        assert ex.telemetry.parallel_items == 30
+    finally:
+        ex.shutdown()
+
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_finish_scope_joins_once_despite_raises(cls):
+    """A scope over raising tasks joins exactly once and never hangs."""
+    ex = cls(n_workers=2)
+    try:
+        def boom():
+            raise RuntimeError("injected")
+
+        with ex.finish() as scope:
+            scope.add([ex.submit(boom) for _ in range(8)])
+        t = ex.telemetry
+        assert t.joins == 1
+        assert t.errors == 8
+        assert t.completions == t.spawns == 8
+    finally:
+        ex.shutdown()

@@ -1,0 +1,249 @@
+"""Seeded end-to-end serving regression: a fixed request trace through
+``ContinuousBatcher`` under ``lc``, ``dlbc``, and two-tenant
+weighted-DLBC.
+
+The admission ORACLE below is a pure-Python replica of the pre-refactor
+scheduling semantics (written against the single-queue ``SlotExecutor``
+before the tenant generalisation): DLBC admits into every idle slot at
+every step (oldest request → lowest slot), LC waits for a fully idle
+slot array, a placed request holds its slot for
+``min(max_new, cache_len - 1)`` decode steps.  The batcher's recorded
+admission trace must match the oracle step for step — if the executor
+refactor moves a single admission, these goldens break.
+
+The tenant layer is pinned two ways:
+
+* single-tenant ``wdlbc`` must be *step-for-step identical* to plain
+  ``dlbc`` (the deficit round-robin is FIFO-transparent for one queue);
+* two-tenant ``wdlbc`` must match an independent reimplementation of
+  the smoothed deficit-round-robin arithmetic.
+
+Also covers the refill-mid-decode cache fix: per-slot cache positions
+mean a request's decoded tokens are identical whether it runs alone or
+is refilled into a slot while a neighbour is deep into its sequence.
+"""
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MDL
+from repro.serve.batcher import ContinuousBatcher, Request
+
+
+def _cfg(vocab=128):
+    return ModelConfig(name="serve-reg", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab=vocab)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return MDL.init_params(_cfg(), jax.random.PRNGKey(0))
+
+
+def make_trace(with_tenants=False):
+    """A fixed, seedless trace (hand-written so the goldens are stable)."""
+    spec = [
+        # (rid, arrive, max_new, tenant)
+        (0, 0, 3, "a"), (1, 0, 5, "b"), (2, 0, 4, "a"), (3, 1, 2, "b"),
+        (4, 2, 6, "a"), (5, 4, 2, "b"), (6, 4, 3, "a"), (7, 7, 5, "b"),
+        (8, 8, 2, "a"), (9, 8, 4, "b"), (10, 12, 3, "a"), (11, 12, 2, "b"),
+    ]
+    return [Request(rid=r, prompt=[1, 2], max_new=m, arrive_step=t,
+                    tenant=(ten if with_tenants else "default"))
+            for r, t, m, ten in spec]
+
+
+# ---------------------------------------------------------------------------
+# The pre-refactor admission oracle (pure Python, no model, no sched pkg)
+# ---------------------------------------------------------------------------
+
+
+def oracle_trace(requests, n_slots, cache_len, policy,
+                 weights=None, max_steps=10_000):
+    """Simulate the serving loop's scheduling only.  Returns
+    (admissions [(step, slot, rid, tenant)], utilization)."""
+    pending = sorted(requests, key=lambda r: r.arrive_step)
+    slots = [None] * n_slots       # rid or None
+    remaining = {}                 # rid -> decode steps left
+    queues = {}                    # tenant -> [request, ...]
+    deficits = {}                  # tenant -> DRR credit
+    order = list(weights) if weights else ["default"]
+    for t in order:
+        queues[t] = []
+        deficits[t] = 0.0
+    admissions, busy, total = [], 0, 0
+    nxt = now = 0
+
+    def queued():
+        return sum(len(q) for q in queues.values())
+
+    def pick_tenant():
+        # independent smoothed-DRR reimplementation (weights=None → FIFO)
+        if not weights:
+            return "default"
+        for t in order:
+            if not queues[t]:
+                deficits[t] = 0.0
+        active = [t for t in order if queues[t]]
+        w_total = sum(weights[t] for t in active)
+        best = active[0]
+        for t in active:
+            deficits[t] += weights[t]
+            if deficits[t] > deficits[best]:
+                best = t
+        deficits[best] -= w_total
+        if len(queues[best]) == 1:
+            deficits[best] = 0.0  # about to be served dry
+        return best
+
+    while (nxt < len(pending) or queued()
+           or any(s is not None for s in slots)) and now < max_steps:
+        while nxt < len(pending) and pending[nxt].arrive_step <= now:
+            r = pending[nxt]
+            queues.setdefault(r.tenant, [])
+            deficits.setdefault(r.tenant, 0.0)
+            if r.tenant not in order:
+                order.append(r.tenant)
+            queues[r.tenant].append(r)
+            nxt += 1
+        idle = [i for i, s in enumerate(slots) if s is None]
+        if policy == "lc":
+            k = min(len(idle), queued()) if len(idle) == n_slots else 0
+        else:  # dlbc (weighted or not): every idle slot, every step
+            k = min(len(idle), queued())
+        for j in range(k):
+            tenant = pick_tenant()
+            r = queues[tenant].pop(0)
+            slot = idle[j]
+            slots[slot] = r.rid
+            remaining[r.rid] = min(r.max_new, cache_len - 1)
+            admissions.append((now, slot, r.rid, r.tenant))
+        active = [i for i, s in enumerate(slots) if s is not None]
+        total += n_slots
+        busy += len(active)
+        for i in active:
+            remaining[slots[i]] -= 1
+            if remaining[slots[i]] <= 0:
+                slots[i] = None
+        now += 1
+    return admissions, busy / max(1, total)
+
+
+def run_batcher(params, policy, tenants=None, with_tenant_labels=False,
+                n_slots=3, cache_len=16):
+    b = ContinuousBatcher(_cfg(), params, n_slots=n_slots,
+                          cache_len=cache_len, policy=policy,
+                          tenants=tenants)
+    b.run(make_trace(with_tenants=with_tenant_labels))
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Goldens
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["dlbc", "lc"])
+def test_single_queue_admissions_match_prerefactor_oracle(params, policy):
+    b = run_batcher(params, policy)
+    want, util = oracle_trace(make_trace(), 3, 16, policy)
+    assert b.admissions == want
+    assert b.stats.utilization == pytest.approx(util)
+    # quiescence conservation: every admitted request completed
+    assert b.sched.telemetry.spawns == b.sched.telemetry.joins \
+        == len(make_trace())
+
+
+def test_single_tenant_wdlbc_is_step_for_step_dlbc(params):
+    """The deficit round-robin must be invisible with one tenant: the
+    weighted batcher reproduces the plain-DLBC admission trace exactly."""
+    plain = run_batcher(params, "dlbc")
+    weighted = run_batcher(params, "wdlbc")  # implicit single "default"
+    assert weighted.admissions == plain.admissions
+    assert weighted.stats.steps == plain.stats.steps
+    assert weighted.stats.utilization == pytest.approx(
+        plain.stats.utilization)
+    assert weighted.stats.latencies == plain.stats.latencies
+    assert weighted.stats.queue_waits == plain.stats.queue_waits
+
+
+def test_two_tenant_wdlbc_matches_drr_oracle(params):
+    weights = {"a": 3.0, "b": 1.0}
+    b = run_batcher(params, "wdlbc", tenants=weights,
+                    with_tenant_labels=True)
+    want, util = oracle_trace(make_trace(with_tenants=True), 3, 16,
+                              "dlbc", weights=weights)
+    assert b.admissions == want
+    assert b.stats.utilization == pytest.approx(util)
+    # per-tenant telemetry conservation (the CI gate's invariant)
+    tele = b.sched.telemetry
+    totals = tele.tenant_totals()
+    assert totals["spawns"] == tele.spawns == 12
+    assert totals["joins"] == tele.joins == 12
+    for name in weights:
+        assert tele.tenant(name).spawns == tele.tenant(name).joins == 6
+
+
+def test_admission_golden_trace_two_tenants(params):
+    """Literal golden of the first admissions — a tripwire for ANY change
+    to the deficit arithmetic, tie-breaking, or slot ordering."""
+    b = run_batcher(params, "wdlbc", tenants={"a": 3.0, "b": 1.0},
+                    with_tenant_labels=True)
+    # step 0, three idle slots: weight 3 front-loads tenant "a" (deficits
+    # a=3 > b=1, then the a=2/b=2 tie breaks to registration order), so
+    # a's two queued requests land before b's one
+    assert b.admissions[:6] == [
+        (0, 0, 0, "a"), (0, 1, 2, "a"), (0, 2, 1, "b"),
+        (3, 0, 4, "a"), (4, 1, 6, "a"), (5, 2, 3, "b"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Refill-mid-decode: per-slot cache positions
+# ---------------------------------------------------------------------------
+
+
+def test_escape_join_base_policy_rejected_at_construction():
+    """DCAFE's escaped joins are meaningless for per-request admission;
+    tenant mode must refuse the base policy in __init__, not mid-run."""
+    from repro.sched.policy import DCAFE
+
+    with pytest.raises(ValueError, match="escape-join"):
+        ContinuousBatcher(_cfg(), params={}, n_slots=2, cache_len=16,
+                          policy=DCAFE(), tenants={"a": 1.0})
+
+
+def test_recurrent_families_are_rejected():
+    """SSM/hybrid recurrent state is not position-indexed, so a slot
+    refill would leak the previous occupant's state into the newcomer —
+    the batcher must refuse rather than decode corrupted tokens."""
+    cfg = ModelConfig(name="serve-ssm", family="ssm", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab=128)
+    with pytest.raises(NotImplementedError, match="recurrent"):
+        ContinuousBatcher(cfg, params={}, n_slots=2, cache_len=16)
+
+
+def test_refill_mid_decode_tokens_match_solo_run(params):
+    """A request refilled into a freed slot while its neighbour is deep
+    into decoding must produce EXACTLY the tokens it produces alone —
+    the per-slot cache index isolates its KV writes and attention mask.
+    (The old shared ``max(slot_pos)`` index wrote the newcomer's KV at
+    the neighbour's position and attended over stale entries.)"""
+    cfg = _cfg()
+    solo_req = Request(rid=1, prompt=[7, 8, 9], max_new=8, arrive_step=4)
+    solo = ContinuousBatcher(cfg, params, n_slots=2, cache_len=32,
+                             policy="dlbc")
+    solo.run([solo_req])
+
+    # contended: slot 0 busy with a long sequence from step 0; the late
+    # request lands in slot 1 at step 4, while the neighbour is at pos 4
+    late = Request(rid=1, prompt=[7, 8, 9], max_new=8, arrive_step=4)
+    long_req = Request(rid=0, prompt=[1, 2], max_new=20, arrive_step=0)
+    cont = ContinuousBatcher(cfg, params, n_slots=2, cache_len=32,
+                             policy="dlbc")
+    cont.run([long_req, late])
+    assert cont.admissions[1][0] == 4  # really refilled mid-decode
+    assert late.tokens == solo_req.tokens

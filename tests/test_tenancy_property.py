@@ -1,0 +1,235 @@
+"""Property-based tests for the weighted-DLBC admission layer and the
+Fig. 6 chunk arithmetic.
+
+Each property is a plain ``check_*`` function driven two ways:
+
+* **hypothesis** (random strategies, shrinking) — extends the
+  ``importorskip`` pattern of ``test_afe_property.py``: the hypothesis
+  section only exists when the library is importable (CI installs it via
+  the ``dev`` extra; zero deselects there), so an environment without it
+  still runs the seeded drivers below instead of losing the coverage;
+* **seeded numpy sweeps** — deterministic random cases that exercise the
+  same checks everywhere.
+
+Properties (the tenancy module's contract, see ``repro/sched/tenancy.py``):
+
+(a) work conservation — no idle slot while any tenant queue is
+    non-empty;
+(b) weighted fairness — over any backlogged prefix, every tenant's
+    admission count stays within ±1 of its weight share (exact at full
+    cycles of ``W = sum(weights)``);
+(c) no starvation — a request at position ``p`` in tenant ``i``'s queue
+    is admitted within ``(p + 1) * ceil(W / w_i)`` admissions;
+(d) ``chunk_plan`` partitions exactly, the caller keeps the smallest
+    chunk, and the remainder spreads one-per-chunk from the front.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.sched import SlotExecutor, TenantRegistry, WeightedRefillPolicy
+from repro.sched.policy import chunk_plan
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI always has hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# The properties, as plain checkable functions
+# ---------------------------------------------------------------------------
+
+
+def make_registry(weights, depths):
+    reg = TenantRegistry(
+        {f"t{i}": float(w) for i, w in enumerate(weights)})
+    for i, (t, d) in enumerate(zip(reg, depths)):
+        t.queue.extend((i, j) for j in range(d))
+    return reg
+
+
+def check_work_conservation(weights, depths, n_slots, n_busy):
+    """After a refill, an idle slot remains only if every queue is empty
+    — and admissions are exactly ``min(idle, queued)`` (DLBC base)."""
+    reg = make_registry(weights, depths)
+    slots = [None] * n_slots
+    for i in range(min(n_busy, n_slots)):
+        slots[i] = "busy"
+    idle = n_slots - min(n_busy, n_slots)
+    queued = sum(depths)
+    ex = SlotExecutor(n_slots, policy="wdlbc")
+    placements = ex.refill(slots, reg)
+    assert len(placements) == min(idle, queued)
+    assert reg.total_queued() == queued - len(placements)
+    taken = [s for s, _ in placements]
+    assert len(set(taken)) == len(taken)               # distinct slots
+    assert all(slots[s] is None for s in taken)        # only idle ones
+    # conservation restated: slots left idle ⇒ nothing left queued
+    if len(placements) < idle:
+        assert reg.total_queued() == 0
+    # telemetry conservation: per-tenant spawns sum to global spawns
+    assert ex.telemetry.tenant_totals()["spawns"] == ex.telemetry.spawns \
+        == len(placements)
+
+
+def check_fair_share(weights, extra):
+    """All tenants backlogged: every prefix of the admission stream keeps
+    each tenant within ±1 admission of its weight share; full cycles of
+    ``W`` are exact."""
+    W = sum(weights)
+    n = W + extra  # at least one full cycle, plus a partial one
+    reg = make_registry(weights, [n] * len(weights))
+    picks = WeightedRefillPolicy().pick(reg, n)
+    assert len(picks) == n
+    counts = {t.name: 0 for t in reg}
+    for m, (t, _) in enumerate(picks, 1):
+        counts[t.name] += 1
+        for i, w in enumerate(weights):
+            ideal = m * w / W
+            assert abs(counts[f"t{i}"] - ideal) <= 1.0, \
+                (weights, m, counts, ideal)
+    if extra == 0:  # exactly one cycle: shares are exact
+        for i, w in enumerate(weights):
+            assert counts[f"t{i}"] == w
+
+
+def check_no_starvation(weights, depths):
+    """Every queued request is admitted within its bound: position ``p``
+    in tenant ``i``'s queue → at most ``(p+1) * ceil(W / w_i)`` total
+    admissions before it runs."""
+    reg = make_registry(weights, depths)
+    W = sum(weights)
+    total = sum(depths)
+    picks = WeightedRefillPolicy().pick(reg, total)
+    assert len(picks) == total  # work conservation, again
+    admitted_at = {item: m for m, (_, item) in enumerate(picks)}
+    for i, (w, d) in enumerate(zip(weights, depths)):
+        bound_per_service = math.ceil(W / w)
+        for p in range(d):
+            at = admitted_at[(i, p)]
+            assert at < (p + 1) * bound_per_service, \
+                (weights, depths, i, p, at)
+    # FIFO within each tenant
+    for i, d in enumerate(depths):
+        order = [admitted_at[(i, p)] for p in range(d)]
+        assert order == sorted(order)
+
+
+def check_single_tenant_fifo(depth, weight):
+    reg = TenantRegistry({"solo": float(weight)})
+    reg.get("solo").queue.extend(range(depth))
+    picks = WeightedRefillPolicy().pick(reg, depth)
+    assert [item for _, item in picks] == list(range(depth))
+    assert reg.get("solo").deficit == 0.0
+
+
+def check_chunk_plan(lo, n, idle):
+    plan = chunk_plan(lo, lo + n, idle)
+    tot = idle + 1
+    eq, r = divmod(n, tot)
+    # exact partition, in order
+    pos = lo
+    for a, b in plan.chunks:
+        assert a == pos and b >= a
+        pos = b
+    assert pos == lo + n
+    # caller keeps the smallest chunk
+    caller_sz = plan.caller[1] - plan.caller[0]
+    assert caller_sz == eq
+    assert all(b - a >= caller_sz for a, b in plan.spawned)
+    # remainder spread one-per-chunk from the front
+    sizes = [b - a for a, b in plan.spawned]
+    if eq > 0:
+        assert sizes == [eq + 1] * r + [eq] * (tot - 1 - r)
+    else:
+        assert sizes == [1] * r
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers (CI: installed via the dev extra, zero deselects)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+    weights_st = st.lists(st.integers(1, 9), min_size=1, max_size=5)
+
+    @settings(max_examples=120, deadline=None)
+    @given(weights=weights_st,
+           depths=st.lists(st.integers(0, 12), min_size=1, max_size=5),
+           n_slots=st.integers(1, 12), n_busy=st.integers(0, 12))
+    def test_hyp_work_conservation(weights, depths, n_slots, n_busy):
+        depths = (depths + [0] * len(weights))[:len(weights)]
+        check_work_conservation(weights, depths, n_slots, n_busy)
+
+    @settings(max_examples=120, deadline=None)
+    @given(weights=weights_st, extra=st.integers(0, 40))
+    def test_hyp_fair_share_within_one(weights, extra):
+        check_fair_share(weights, extra)
+
+    @settings(max_examples=120, deadline=None)
+    @given(weights=weights_st,
+           depths=st.lists(st.integers(1, 10), min_size=1, max_size=5))
+    def test_hyp_no_starvation(weights, depths):
+        depths = (depths + [1] * len(weights))[:len(weights)]
+        check_no_starvation(weights, depths)
+
+    @settings(max_examples=80, deadline=None)
+    @given(depth=st.integers(0, 50), weight=st.integers(1, 9))
+    def test_hyp_single_tenant_fifo(depth, weight):
+        check_single_tenant_fifo(depth, weight)
+
+    @settings(max_examples=200, deadline=None)
+    @given(lo=st.integers(0, 1000), n=st.integers(0, 5000),
+           idle=st.integers(0, 64))
+    def test_hyp_chunk_plan(lo, n, idle):
+        check_chunk_plan(lo, n, idle)
+
+
+# ---------------------------------------------------------------------------
+# seeded sweeps (deterministic; run with or without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_work_conservation_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(150):
+        nt = int(rng.integers(1, 6))
+        weights = [int(w) for w in rng.integers(1, 9, size=nt)]
+        depths = [int(d) for d in rng.integers(0, 12, size=nt)]
+        check_work_conservation(weights, depths,
+                                int(rng.integers(1, 12)),
+                                int(rng.integers(0, 12)))
+
+
+def test_seeded_fair_share_sweep():
+    rng = np.random.default_rng(1)
+    for _ in range(150):
+        nt = int(rng.integers(1, 6))
+        weights = [int(w) for w in rng.integers(1, 9, size=nt)]
+        check_fair_share(weights, int(rng.integers(0, 40)))
+
+
+def test_seeded_no_starvation_sweep():
+    rng = np.random.default_rng(2)
+    for _ in range(150):
+        nt = int(rng.integers(1, 6))
+        weights = [int(w) for w in rng.integers(1, 9, size=nt)]
+        depths = [int(d) for d in rng.integers(1, 10, size=nt)]
+        check_no_starvation(weights, depths)
+
+
+def test_seeded_single_tenant_fifo_sweep():
+    for depth, weight in [(0, 1), (1, 5), (17, 2), (50, 9)]:
+        check_single_tenant_fifo(depth, weight)
+
+
+def test_seeded_chunk_plan_sweep():
+    rng = np.random.default_rng(3)
+    for _ in range(300):
+        check_chunk_plan(int(rng.integers(0, 1000)),
+                         int(rng.integers(0, 5000)),
+                         int(rng.integers(0, 64)))
