@@ -11,6 +11,8 @@ One benchmark per paper table/figure plus the TPU-side analogues:
   batcher    — DLBC continuous batching vs LC fixed batches (§3.2 serving)
   tenants    — multi-tenant serving: weighted-DLBC isolation under bursts
   sched      — repro.sched policy ladder on the host pool (uniform/skewed)
+  grain      — adaptive-grain work stealing: steal-driven splitting vs
+               fixed grains (uniform overhead collapse + skew rebalance)
   adoption   — sched adoption surfaces: train-step / checkpoint / MoE
                spawn-join telemetry + the DCAFE≤LC join regression gate
   design     — paper §6 DLBC design-choice study
@@ -23,12 +25,13 @@ import time
 from . import (
     bench_adoption, bench_batcher, bench_design_choices, bench_fig10_counts,
     bench_fig11_speedup, bench_fig12_schemes, bench_fig13_energy,
-    bench_moe_dispatch, bench_roofline, bench_sched, bench_sync_policy,
-    bench_tenants,
+    bench_grain, bench_moe_dispatch, bench_roofline, bench_sched,
+    bench_sync_policy, bench_tenants,
 )
 
 ALL = {
     "adoption": bench_adoption.run,
+    "grain": bench_grain.run,
     "fig10": bench_fig10_counts.run,
     "fig11": bench_fig11_speedup.run,
     "fig12": bench_fig12_schemes.run,

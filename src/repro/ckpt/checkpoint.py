@@ -34,13 +34,17 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
-from ..sched import FinishScope, SchedTelemetry, ThreadExecutor, get_policy
+from ..sched import (
+    FinishScope, SchedTelemetry, ThreadExecutor, WorkStealingExecutor,
+    get_policy,
+)
 
 
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3,
                  executor: Optional[ThreadExecutor] = None,
-                 sched_policy: str = "dcafe", n_io_workers: int = 4):
+                 sched_policy: str = "dcafe", n_io_workers: int = 4,
+                 stealing: bool = False):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
@@ -51,6 +55,10 @@ class CheckpointManager:
         self._own_executor = executor is None
         self._ex = executor
         self._n_io_workers = n_io_workers
+        # Adaptive work stealing for shard writes: ranges split on steal
+        # when shard sizes skew, grain comes from the policy's
+        # GrainController (no grain arithmetic on this surface).
+        self._stealing = stealing
         self.telemetry = executor.telemetry if executor is not None \
             else SchedTelemetry()
         self._scope: Optional[FinishScope] = None
@@ -59,8 +67,9 @@ class CheckpointManager:
     @property
     def executor(self) -> ThreadExecutor:
         if self._ex is None:
-            self._ex = ThreadExecutor(n_workers=self._n_io_workers,
-                                      telemetry=self.telemetry)
+            cls = WorkStealingExecutor if self._stealing else ThreadExecutor
+            self._ex = cls(n_workers=self._n_io_workers,
+                           telemetry=self.telemetry)
             if self._own_executor:
                 # a dropped manager must not leak its worker threads even
                 # if the caller never reached close()

@@ -34,14 +34,16 @@ from .capacity import (  # noqa: F401
     SimWorkerCapacity, SlotCapacity,
 )
 from .policy import (  # noqa: F401
-    DCAFE, DLBC, LC, POLICIES, ChunkPlan, Decision, SchedPolicy, Serial,
-    chunk_plan, fig6_chunk_end, fig6_eq, fig6_next, fig6_rem0, fig6_tot,
-    get_policy, static_chunk_size, static_plan,
+    DCAFE, DLBC, LC, POLICIES, ChunkPlan, Decision, GrainController,
+    GrainPlan, SchedPolicy, Serial, chunk_plan, fig6_chunk_end, fig6_eq,
+    fig6_next, fig6_rem0, fig6_tot, get_policy, static_chunk_size,
+    static_plan,
 )
 from .tenancy import (  # noqa: F401
     TenantQueue, TenantRegistry, WeightedRefillPolicy, ensure_weighted,
 )
 from .executors import (  # noqa: F401
-    FinishScope, SlotExecutor, ThreadExecutor, WorkStealingExecutor,
+    FinishScope, RangeLatch, RangeTask, SlotExecutor, ThreadExecutor,
+    WorkStealingExecutor,
 )
 from .telemetry import SchedCounters, SchedTelemetry, percentile  # noqa: F401

@@ -4,8 +4,12 @@
   generalisation of the old ``repro.data.pool.DLBCPool``.  ``run_loop``
   is the paper's three-block structure (chunked / parent / serial) with
   the *policy* deciding which arm to take at each step.
-* :class:`WorkStealingExecutor` — per-worker deques; an idle worker
-  steals from the back of a victim's deque.  Same ``run_loop``.
+* :class:`WorkStealingExecutor` — per-worker deques under per-deque
+  locks, with **lazy steal-driven splitting**: tasks carry ``(lo, hi)``
+  ranges, the owner claims items off the front one at a time, a thief
+  steals the back half of the largest stealable range, and the split
+  recurses — grain adapts to observed imbalance with zero tuning.  Same
+  ``run_loop``.
 * :class:`FinishScope` — DCAFE on the host: spawned chunks escape their
   per-loop join to one outer scope (one join for many loops).
 * :class:`SlotExecutor` — admission scheduling over fixed device decode
@@ -16,26 +20,96 @@
 from __future__ import annotations
 
 import queue
+import random
 import threading
 import time
 from collections import deque
+from itertools import count
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .capacity import PoolCapacity, SlotCapacity
-from .policy import SchedPolicy, get_policy
+from .policy import GrainPlan, SchedPolicy, get_policy
 from .telemetry import SchedTelemetry
 from .tenancy import TenantRegistry, ensure_weighted
 
 
+class RangeLatch:
+    """Countdown latch for one submitted range: fires once every item of
+    ``[lo, hi)`` has executed, across however many steal-splits the range
+    underwent.  Event-compatible (``wait``/``is_set``) so
+    :class:`FinishScope` and ``run_loop`` joins treat it exactly like the
+    per-task :class:`threading.Event` it coalesces — one waitable per
+    submitted range instead of one per item, so DCAFE joins stay
+    O(ranges)."""
+
+    __slots__ = ("_remaining", "_lock", "_event")
+
+    def __init__(self, n_items: int):
+        self._remaining = n_items
+        self._lock = threading.Lock()
+        self._event = threading.Event()
+        if n_items <= 0:
+            self._event.set()
+
+    def discharge(self, n: int):
+        """Credit ``n`` executed items (workers call this once per drain
+        session, not once per item)."""
+        if n <= 0:
+            return
+        with self._lock:
+            self._remaining -= n
+            if self._remaining <= 0:
+                self._event.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def is_set(self) -> bool:
+        return self._event.is_set()
+
+
+class RangeTask:
+    """A stealable slice of one loop: run ``fn(items[j])`` for ``j`` in
+    ``[lo, hi)``.  ``lo``/``hi`` are only ever mutated under the owning
+    worker's deque lock: the owner claims ``lo`` forward one item at a
+    time, a thief truncates ``hi`` to steal the back half.  All splits of
+    a submitted range share one :class:`RangeLatch`."""
+
+    __slots__ = ("items", "fn", "lo", "hi", "latch", "split_min", "active")
+
+    def __init__(self, items: Sequence, fn: Callable, lo: int, hi: int,
+                 latch: RangeLatch, split_min: int = 2):
+        self.items = items
+        self.fn = fn
+        self.lo = lo
+        self.hi = hi
+        self.latch = latch
+        self.split_min = max(2, split_min)
+        #: True while an owning worker's drain session holds this task
+        #: (set/read only under the holding deque's lock).  A helper may
+        #: take the last item of — and remove — only *inactive* tasks;
+        #: an active task's last item belongs to its already-awake owner.
+        self.active = False
+
+    def run(self, j: int):
+        fn = self.fn
+        if self.items is None:  # single-callable submit() wrapper
+            fn()
+        else:
+            fn(self.items[j])
+
+
 class FinishScope:
     """Collects escaped joins (DCAFE): ``with executor.finish() as f:``
-    runs many loops but performs ONE join at scope exit."""
+    runs many loops but performs ONE join at scope exit.  Holds any
+    waitable with Event semantics — per-task events from the FIFO pool,
+    per-range :class:`RangeLatch`\\ es from the work-stealing pool."""
 
     def __init__(self, telemetry: Optional[SchedTelemetry] = None):
-        self._events: List[threading.Event] = []
+        self._events: List[Any] = []
         self.telemetry = telemetry
 
-    def add(self, events: Sequence[threading.Event]):
+    def add(self, events: Sequence[Any]):
         self._events.extend(events)
 
     def join(self):
@@ -75,6 +149,11 @@ class ThreadExecutor:
         self._q: "queue.Queue" = queue.Queue()
         self._idle = n_workers  # racy read by design (paper §3.2.1)
         self._idle_lock = threading.Lock()
+        #: by-name policy resolutions, cached per executor so policy
+        #: state — the DLBC grain controller's steal-feedback baseline —
+        #: persists across run_loop calls instead of dying with a fresh
+        #: instance every loop (racy insert is benign: one winner stays)
+        self._policy_cache: Dict[str, SchedPolicy] = {}
         self.telemetry = telemetry or SchedTelemetry()
         self.capacity = PoolCapacity(self)
         self._threads = [
@@ -133,6 +212,43 @@ class ThreadExecutor:
         """Open a DCAFE finish scope for escaped joins."""
         return FinishScope(self.telemetry)
 
+    # -- grain: how a planned chunk becomes spawned tasks --------------------
+
+    def _grain_plan(self, n: int, policy: SchedPolicy) -> GrainPlan:
+        """An explicit ``chunk_grain`` wins; the FIFO pool otherwise keeps
+        one task per planned chunk (nothing to steal from a shared queue,
+        so pre-splitting only adds overhead)."""
+        return GrainPlan(initial=self.chunk_grain)
+
+    def _spawn_range(self, items: Sequence, fn: Callable, lo: int, hi: int,
+                     grain: GrainPlan) -> List[Any]:
+        """Spawn ``[lo, hi)`` as tasks of at most ``grain.initial`` items;
+        returns the waitables the join (or finish scope) collects."""
+        t = self.telemetry
+        step = grain.initial or (hi - lo)
+        events = []
+        for a in range(lo, hi, step):
+            b = min(a + step, hi)
+
+            def task(a=a, b=b):
+                for j in range(a, b):
+                    t0 = time.perf_counter()
+                    try:
+                        fn(items[j])
+                    except Exception:
+                        with t.lock:
+                            t.errors += 1
+                    finally:
+                        t.record_latency(time.perf_counter() - t0)
+
+            events.append(self._submit(task))
+        return events
+
+    def _join(self, events: Sequence[Any]) -> None:
+        """Wait for every spawned task of one loop (the per-loop join)."""
+        for ev in events:
+            ev.wait()
+
     # -- policy-driven loop execution ----------------------------------------
 
     def run_loop(self, items: Sequence, fn: Callable,
@@ -152,7 +268,14 @@ class ThreadExecutor:
         executed on the CALLING thread (the caller's chunk, the serial
         block) propagate like a plain ``for`` loop.
         """
-        policy = get_policy(policy, default="dlbc")
+        if policy is None or isinstance(policy, str):
+            key = policy or "dlbc"
+            cached = self._policy_cache.get(key)
+            if cached is None:
+                cached = self._policy_cache[key] = get_policy(key)
+            policy = cached
+        else:
+            policy = get_policy(policy)
         t = self.telemetry
         n = len(items)
         i = 0
@@ -171,35 +294,27 @@ class ThreadExecutor:
             decision = policy.decide(i, n, self.capacity)
             if decision.plan is not None:
                 plan = decision.plan
+                grain = self._grain_plan(n - i, policy)
                 events = []
                 for lo, hi in plan.spawned:
-                    grain = self.chunk_grain or (hi - lo)
-                    for a in range(lo, hi, grain):
-                        b = min(a + grain, hi)
-
-                        def task(a=a, b=b):
-                            for j in range(a, b):
-                                t0 = time.perf_counter()
-                                try:
-                                    fn(items[j])
-                                except Exception:
-                                    with t.lock:
-                                        t.errors += 1
-                                finally:
-                                    t.record_latency(
-                                        time.perf_counter() - t0)
-
-                        events.append(self._submit(task))
-                        with t.lock:
-                            t.parallel_items += b - a
-                # parent block: the caller's (smallest) chunk
-                for j in range(*plan.caller):
-                    run_item(j, serial=False)
+                    events.extend(self._spawn_range(items, fn, lo, hi, grain))
+                    with t.lock:
+                        t.parallel_items += hi - lo
+                # parent block: the caller's (smallest) chunk.  Caller
+                # items propagate like a plain for loop (see docstring),
+                # so the per-item telemetry is batched outside the lock.
+                ca, cb = plan.caller
+                for j in range(ca, cb):
+                    t0 = time.perf_counter()
+                    fn(items[j])
+                    t.record_latency(time.perf_counter() - t0)
+                if cb > ca:
+                    with t.lock:
+                        t.parallel_items += cb - ca
                 if policy.escape_join and scope is not None:
                     scope.add(events)  # DCAFE: join escapes to the scope
                 else:
-                    for ev in events:
-                        ev.wait()
+                    self._join(events)
                     with t.lock:
                         t.joins += 1
                 return
@@ -220,84 +335,385 @@ class ThreadExecutor:
                 return
 
 
-class WorkStealingExecutor(ThreadExecutor):
-    """Per-worker deques with back-end stealing.
+#: Failed steal scans before a worker parks.  The backoff is a
+#: ``sched_yield`` (``time.sleep(0)``): microseconds, not the old 0.1 s
+#: global-lock poll, so a worker re-probes a few times while work is
+#: still being submitted and only then pays for a real park.
+_SPIN_TRIES = 4
+#: Parked-worker wait backstop, seconds.  The wakeup protocol (register →
+#: re-check → wait; producers push *then* unpark) makes a lost wakeup
+#: impossible, so this only bounds the damage of a protocol bug.
+_PARK_TIMEOUT = 0.1
+#: How long a joining caller waits before it starts helping (claiming
+#: items itself).  0 = help immediately: on loops too small to cover the
+#: workers' wakeup latency the caller drains stragglers' ranges itself,
+#: degrading gracefully toward serial speed instead of sleeping.
+_HELP_GRACE = 0.0
+#: Items a helper claims per lock acquisition when recent item costs
+#: look uniform (batch amortisation); skewed costs force batch = 1.
+_HELP_BATCH = 8
 
-    The owner pushes/pops its own deque at the front; an idle worker
-    steals from the *back* of the first non-empty victim deque (classic
-    Arora-Blumofe-Plotkin discipline), so contiguous cost skew spreads
-    across workers even after the chunk plan is committed.  Tasks are
-    per-item (``chunk_grain = 1``): a committed chunk stays stealable.
+
+class WorkStealingExecutor(ThreadExecutor):
+    """Per-worker deques, per-deque locks, lazy steal-driven splitting.
+
+    Tasks carry ``(lo, hi)`` ranges (:class:`RangeTask`) instead of
+    single items.  The **owner** claims items off the front of its front
+    task one at a time (one uncontended lock acquisition per item — no
+    queue round-trip, no per-item event).  A **thief** with an empty
+    deque scans victims from a randomised start, picks the largest range
+    with at least ``split_min`` items left, and steals its *back half*
+    by truncating ``hi`` — the stolen half lands on the thief's own
+    deque, where it is itself stealable, so the split recurses and grain
+    adapts to observed imbalance with zero tuning.  When only
+    single-item tasks remain, the back task is stolen whole (classic
+    Arora–Blumofe–Plotkin).
+
+    Synchronisation: one lock per deque (owner claim and thief split of
+    the same range serialise on the *victim's* lock; disjoint deques
+    never contend) plus a parked-worker protocol — an out-of-work worker
+    backs off briefly, registers itself parked, re-checks every deque,
+    and sleeps on its own event until a producer pushes work — replacing
+    the old single global condition variable and its 0.1 s poll.  Joins:
+    every submitted range gets ONE :class:`RangeLatch` shared by all its
+    splits, so a DCAFE :class:`FinishScope` holds O(ranges) waitables,
+    not O(items).
+
+    Counter contract (all bumps under ``telemetry.lock``): ``spawns``
+    counts task creations (submits + splits), ``completions`` counts
+    tasks drained to exhaustion — ``spawns == completions`` at
+    quiescence; ``steals`` counts successful steals (``splits`` of them
+    split a range; ``steal_victims`` histograms who they hit).
     """
 
-    chunk_grain = 1
+    #: ``None`` = adaptive: ranges are carved per the policy's
+    #: ``grain_plan`` (ceil(n / (k·workers)) items each) and re-split on
+    #: steal.  Set an int (e.g. 1) to force a fixed grain — the
+    #: benchmark baselines do.
+    chunk_grain: Optional[int] = None
 
     def __init__(self, n_workers: int = 4,
                  telemetry: Optional[SchedTelemetry] = None):
+        self._locks = [threading.Lock() for _ in range(n_workers)]
         self._deques: List[deque] = [deque() for _ in range(n_workers)]
-        self._cv = threading.Condition()
         self._stop = False
-        self._rr = 0
+        self._rr = count()
+        self._park_lock = threading.Lock()
+        self._park_events = [threading.Event() for _ in range(n_workers)]
+        self._parked: set = set()
         super().__init__(n_workers, telemetry)
 
-    def _worker_index(self) -> int:
-        me = threading.current_thread()
-        return self._threads.index(me)
+    # -- submission ----------------------------------------------------------
 
-    def _worker(self):
-        w = self._worker_index()
-        while True:
-            item = None
-            with self._cv:
-                while True:
-                    if self._deques[w]:
-                        item = self._deques[w].popleft()
-                        break
-                    stolen = False
-                    for v in range(self.n_workers):
-                        if v != w and self._deques[v]:
-                            item = self._deques[v].pop()  # steal from back
-                            self.telemetry.steals += 1
-                            stolen = True
-                            break
-                    if stolen:
-                        break
-                    # Drain semantics matching ThreadExecutor's sentinel
-                    # queue: stop only once every deque is empty, so
-                    # already-submitted tasks still run and their done
-                    # events fire (a FinishScope.join never hangs).
-                    if self._stop:
-                        return
-                    self._cv.wait(timeout=0.1)
-                self._idle -= 1
-            fn, done = item
-            try:
-                fn()
-            except Exception:
-                # same containment contract as ThreadExecutor._worker
-                with self.telemetry.lock:
-                    self.telemetry.errors += 1
-            finally:
-                with self._cv:
-                    self._idle += 1
-                with self.telemetry.lock:
-                    self.telemetry.completions += 1
-                done.set()
+    def _place(self, task: RangeTask):
+        """Round-robin a task onto a worker deque and wake someone —
+        preferably that deque's owner, so work does not sit in a parked
+        worker's deque until another worker happens to scan it."""
+        v = next(self._rr) % self.n_workers
+        with self._locks[v]:
+            self._deques[v].append(task)
+        self._unpark(prefer=v)
 
-    def _submit(self, fn: Callable[[], None]) -> threading.Event:
-        ev = threading.Event()
+    def _submit(self, fn: Callable[[], None]) -> RangeLatch:
+        """Single-callable entry point (``submit``/base helpers): a
+        one-item range."""
+        latch = RangeLatch(1)
         with self.telemetry.lock:
             self.telemetry.spawns += 1
-        with self._cv:
-            self._deques[self._rr % self.n_workers].append((fn, ev))
-            self._rr += 1
-            self._cv.notify_all()
-        return ev
+        self._place(RangeTask(None, fn, 0, 1, latch))
+        return latch
+
+    def _grain_plan(self, n: int, policy: SchedPolicy) -> GrainPlan:
+        if self.chunk_grain:
+            return GrainPlan(initial=self.chunk_grain)
+        return policy.grain_plan(n, self.capacity, self.telemetry)
+
+    def _spawn_range(self, items, fn, lo, hi, grain: GrainPlan):
+        """Carve ``[lo, hi)`` into initial ranges and place them in one
+        wave: one spawn-counter bump, one deque push per range, then one
+        unpark sweep — the submit path is O(ranges), not O(items)."""
+        step = grain.initial or (hi - lo)
+        tasks = []
+        for a in range(lo, hi, step):
+            b = min(a + step, hi)
+            tasks.append(RangeTask(items, fn, a, b, RangeLatch(b - a),
+                                   grain.split_min))
+        with self.telemetry.lock:
+            self.telemetry.spawns += len(tasks)
+        owners = set()
+        for task in tasks:
+            v = next(self._rr) % self.n_workers
+            with self._locks[v]:
+                self._deques[v].append(task)
+            owners.add(v)
+        for v in owners:
+            self._unpark(prefer=v)
+        return [task.latch for task in tasks]
+
+    # -- worker loop ---------------------------------------------------------
+
+    def _worker(self):
+        w = self._threads.index(threading.current_thread())
+        rng = random.Random(0x5EED ^ (w * 0x9E3779B9))
+        attempts = 0
+        while True:
+            if self._drain_own(w):
+                attempts = 0
+                continue
+            if self._try_steal(w, rng):
+                attempts = 0
+                continue
+            if self._stop:
+                # Drain semantics matching ThreadExecutor's sentinel
+                # queue: exit only once no work is visible anywhere, so
+                # already-submitted tasks still run and their latches
+                # fire (a FinishScope.join never hangs).
+                return
+            attempts += 1
+            if attempts <= _SPIN_TRIES:
+                time.sleep(0)  # sched_yield: bounded, near-free backoff
+            else:
+                self._park(w)
+
+    def _drain_own(self, w: int) -> bool:
+        """Run every task on our own deque to exhaustion.  Returns True
+        if any work was found (the caller then re-scans immediately)."""
+        lock, dq = self._locks[w], self._deques[w]
+        if not dq:  # racy peek: cheap fast path past empty deques
+            return False
+        with self._idle_lock:
+            self._idle -= 1
+        worked = False
+        try:
+            while True:
+                with lock:
+                    if not dq:
+                        return worked
+                    task = dq[0]
+                    task.active = True  # helpers now leave the pop to us
+                worked = True
+                self._drain_task(w, task)
+        finally:
+            with self._idle_lock:
+                self._idle += 1
+
+    def _drain_task(self, w: int, task: RangeTask):
+        """One drain session: claim items off the front of ``task`` (our
+        deque's front, which only we ever pop) until it is exhausted —
+        naturally or by thieves truncating ``hi`` — then pop it and
+        credit its latch once with everything we ran."""
+        lock, dq = self._locks[w], self._deques[w]
+        ran = 0
+        try:
+            while True:
+                with lock:
+                    if task.lo >= task.hi:
+                        dq.popleft()  # ours: helpers skip active tasks'
+                        return        # last items, thieves never pop front
+                    j = task.lo
+                    task.lo = j + 1
+                self._run_item(task, j)
+                ran += 1
+        finally:
+            # completions before the latch: a joiner woken by the final
+            # discharge must already observe spawns == completions
+            with self.telemetry.lock:
+                self.telemetry.completions += 1
+            task.latch.discharge(ran)
+
+    def _run_item(self, task: RangeTask, j: int):
+        t = self.telemetry
+        t0 = time.perf_counter()
+        try:
+            task.run(j)
+        except Exception:
+            # same containment contract as ThreadExecutor._worker: the
+            # worker survives, the claimed item still counts, the latch
+            # still fires
+            with t.lock:
+                t.errors += 1
+        finally:
+            t.record_latency(time.perf_counter() - t0)
+
+    # -- helping join --------------------------------------------------------
+
+    def _join(self, events: Sequence[Any]) -> None:
+        """Join by *helping*: the caller claims items off the largest
+        visible range until every latch fires.  This is what ranges buy
+        over per-item tasks — a joiner can contribute to exactly the
+        range that is behind, so a heavy head never strands on one worker
+        while the caller sleeps, and a loop too small to cover the
+        workers' wakeup latency degrades gracefully toward serial speed
+        (the helper takes over owner-less tasks entirely, see
+        :meth:`_help_one`).  An optional grace period (``_HELP_GRACE``)
+        can keep the caller off the deque locks on loops expected to
+        join immediately."""
+        pending = [ev for ev in events if not ev.is_set()]
+        if not pending:
+            return
+        if _HELP_GRACE > 0:
+            deadline = time.perf_counter() + _HELP_GRACE
+            for ev in pending:
+                left = deadline - time.perf_counter()
+                if left <= 0 or not ev.wait(timeout=left):
+                    break
+            pending = [ev for ev in pending if not ev.is_set()]
+        # Helper claim granularity from the same feedback signal the
+        # grain controller uses: uniform recent item costs → batch claims
+        # (amortise the lock over several items); skewed costs → one item
+        # at a time, so the helper never walks off with a heavy head.
+        batch = _HELP_BATCH if self.telemetry.recent_skew() < 2.0 else 1
+        idle_rounds = 0
+        while pending:
+            if self._help_one(batch):
+                idle_rounds = 0
+            elif idle_rounds < _SPIN_TRIES:
+                # nothing claimable but latches unset: the owners hold
+                # only their final items — yield them the core instead
+                # of oversleeping a futex quantum
+                idle_rounds += 1
+                time.sleep(0)
+            else:
+                pending[0].wait(timeout=5e-4)
+            pending = [ev for ev in pending if not ev.is_set()]
+
+    def _help_one(self, batch: int = 1) -> bool:
+        """Claim and run up to ``batch`` items from the largest helpable
+        range.  Find and claim happen under one hold of that deque's
+        lock — a task's range is only ever mutated under the lock of the
+        deque currently holding it.  An *active* task (an owner session
+        holds it) is helpable down to its last item, which stays with
+        the owner; an *inactive* task (its owner is parked or busy
+        elsewhere) can be taken over entirely — claiming its last item
+        removes it, so a join never stalls on a wakeup for microseconds
+        of work."""
+        for v in range(self.n_workers):
+            if not self._deques[v]:  # racy peek
+                continue
+            lock, dq = self._locks[v], self._deques[v]
+            with lock:
+                best, best_sz = None, 0
+                for task in dq:
+                    sz = task.hi - task.lo
+                    if sz > best_sz and (sz >= 2 or not task.active):
+                        best, best_sz = task, sz
+                if best is None:
+                    continue
+                take = min(batch, best_sz - 1 if best.active else best_sz)
+                j = best.lo
+                best.lo = j + take
+                removed = best.lo >= best.hi and not best.active
+                if removed:
+                    dq.remove(best)
+            for jj in range(j, j + take):
+                self._run_item(best, jj)
+            if removed:
+                with self.telemetry.lock:
+                    self.telemetry.completions += 1
+            best.latch.discharge(take)
+            return True
+        return False
+
+    # -- stealing ------------------------------------------------------------
+
+    def _try_steal(self, w: int, rng: random.Random) -> bool:
+        """Scan victims from a randomised start (no worker-0 hotspot) and
+        take the first steal that lands; the loot goes to the front of
+        our own deque, where it is immediately drainable — and itself
+        stealable, so splitting recurses."""
+        n = self.n_workers
+        start = rng.randrange(n)
+        for d in range(n):
+            v = (start + d) % n
+            if v == w:
+                continue
+            loot = self._steal_from(v)
+            if loot is None:
+                continue
+            task, split = loot
+            with self._locks[w]:
+                self._deques[w].appendleft(task)
+            t = self.telemetry
+            with t.lock:
+                t.steals += 1
+                t.steal_victims[v] = t.steal_victims.get(v, 0) + 1
+                if split:
+                    t.splits += 1
+                    t.spawns += 1  # a split mints a new task
+            return True
+        return False
+
+    def _steal_from(self, v: int) -> Optional[Tuple[RangeTask, bool]]:
+        """Under the victim's deque lock: split the largest splittable
+        range (steal its back half), else pop a whole queued task off the
+        back.  The front task is never popped by a thief — its owner may
+        be mid-claim — but it *is* splittable, because a split only
+        truncates ``hi`` above the owner's claim cursor."""
+        lock, dq = self._locks[v], self._deques[v]
+        if not dq:  # racy peek, see _drain_own
+            return None
+        with lock:
+            if not dq:
+                return None
+            best = None
+            for task in dq:
+                size = task.hi - task.lo
+                if size >= task.split_min and (
+                        best is None or size > best.hi - best.lo):
+                    best = task
+            if best is not None:
+                # back half to the thief, the odd item stays with the
+                # owner (who is already consuming lo forward)
+                mid = best.lo + (best.hi - best.lo + 1) // 2
+                stolen = RangeTask(best.items, best.fn, mid, best.hi,
+                                   best.latch, best.split_min)
+                best.hi = mid
+                return stolen, True
+            if len(dq) >= 2:
+                return dq.pop(), False
+            return None
+
+    # -- parking -------------------------------------------------------------
+
+    def _unpark(self, prefer: Optional[int] = None, all_workers: bool = False):
+        with self._park_lock:
+            if all_workers:
+                woken, self._parked = set(self._parked), set()
+            elif prefer is not None and prefer in self._parked:
+                self._parked.discard(prefer)
+                woken = {prefer}
+            elif self._parked:
+                woken = {self._parked.pop()}
+            else:
+                return
+        for v in woken:
+            self._park_events[v].set()
+
+    def _park(self, w: int):
+        """Register parked, re-check for work, then sleep until a
+        producer's unpark (or the backstop timeout).  The register-then-
+        re-check order pairs with the producers' push-then-unpark order:
+        any push racing our scan either lands before the scan reads that
+        deque (we see it) or unparks us afterwards (we are registered)."""
+        ev = self._park_events[w]
+        with self._park_lock:
+            ev.clear()
+            self._parked.add(w)
+        # Re-check only our own deque: cross-deque work is covered by the
+        # producers' push-then-unpark order, and re-checking every deque
+        # here would busy-spin whenever the only remaining work is an
+        # unstealable front task some owner is already draining.
+        if self._stop or self._deques[w]:
+            with self._park_lock:
+                self._parked.discard(w)
+            return
+        ev.wait(timeout=_PARK_TIMEOUT)
+        with self._park_lock:
+            self._parked.discard(w)
 
     def shutdown(self):
-        with self._cv:
-            self._stop = True
-            self._cv.notify_all()
+        self._stop = True
+        self._unpark(all_workers=True)
 
 
 class SlotExecutor:

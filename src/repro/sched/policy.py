@@ -128,6 +128,84 @@ def static_plan(lo: int, hi: int, nchunks: int) -> ChunkPlan:
 
 
 # ---------------------------------------------------------------------------
+# Grain plans (adaptive work stealing)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GrainPlan:
+    """How a spawned chunk is carved into *stealable ranges*.
+
+    ``initial`` is the items-per-range a chunk is pre-split into before
+    any steal happens (``None`` = one range per chunk — fully lazy);
+    ``split_min`` is the smallest range a thief is allowed to split (the
+    re-split threshold): a range of fewer items is stolen whole or left
+    alone, so splitting terminates and single items never churn.
+    """
+
+    initial: Optional[int] = None
+    split_min: int = 2
+
+
+class GrainController:
+    """Closes the DLBC loop with runtime feedback: grain from steals.
+
+    DLBC decides chunk sizes from *available workers* at spawn time; this
+    controller decides how divisible those chunks stay afterwards.  Start
+    coarse — ``initial = ceil(n / (k · workers))``, so each worker's
+    chunk lands as ~``k`` ranges and per-task overhead is amortised over
+    many items — and let runtime feedback prove imbalance: between loops
+    the steal delta read off :class:`~repro.sched.telemetry.SchedTelemetry`
+    says *someone went hungry*, and the recent latency spread
+    (``recent_skew``) disambiguates why.  Steals with skewed item costs
+    mean a coarser grain stranded a heavy head — halve the grain (double
+    ``k``, up to ``k_max``).  Steals with uniform costs are end-of-loop
+    churn (thieves passing tail scraps around) — treating them as
+    imbalance would spiral the grain down to per-item tasks, so ``k``
+    instead relaxes back toward ``k0``.  Both reads are unsynchronised
+    by design — grain is a performance hint, and the benign-race
+    discipline of the paper's idle-count probe (§3.2.1) applies
+    verbatim.
+    """
+
+    def __init__(self, k: int = 1, k_max: int = 8, min_grain: int = 1,
+                 split_min: int = 2, skew_ratio: float = 2.0):
+        if k < 1 or k_max < k or min_grain < 1:
+            raise ValueError(f"bad grain controller ({k=}, {k_max=}, "
+                             f"{min_grain=})")
+        self.k0 = self.k = k
+        self.k_max = k_max
+        self.min_grain = min_grain
+        self.split_min = split_min
+        #: p90/p50 item-latency ratio above which steals count as cost
+        #: imbalance rather than churn
+        self.skew_ratio = skew_ratio
+        self._last_steals: Optional[int] = None
+
+    def plan(self, n: int, workers: int, telemetry=None) -> GrainPlan:
+        """Initial grain for an ``n``-item loop over ``workers`` workers,
+        adapting ``k`` from the steal delta since the previous plan."""
+        if telemetry is not None:
+            steals = telemetry.steals  # benign racy read (advisory)
+            if self._last_steals is not None:
+                delta = steals - self._last_steals
+                if delta > 0 and telemetry.recent_skew() >= self.skew_ratio:
+                    if delta > workers:
+                        self.k = min(self.k * 2, self.k_max)
+                elif self.k > self.k0:
+                    self.k -= 1  # churn or quiet: relax toward coarse
+            self._last_steals = steals
+        if n <= 0 or workers <= 0:
+            return GrainPlan(None, self.split_min)
+        initial = max(self.min_grain, -(-n // (self.k * workers)))
+        return GrainPlan(initial, self.split_min)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return (f"GrainController(k={self.k}, k_max={self.k_max}, "
+                f"split_min={self.split_min})")
+
+
+# ---------------------------------------------------------------------------
 # Policies
 # ---------------------------------------------------------------------------
 
@@ -168,6 +246,15 @@ class SchedPolicy:
     def admit(self, idle: int, queued: int, total_slots: int) -> int:
         """How many queued requests to place into idle slots right now."""
         raise NotImplementedError
+
+    def grain_plan(self, n: int, capacity: CapacityProvider,
+                   telemetry=None) -> GrainPlan:
+        """How stealable ranges are carved from this policy's chunks on a
+        work-stealing substrate (items per initial range + the re-split
+        threshold).  The default keeps each chunk as one lazily-split
+        range; DLBC-family policies route through their
+        :class:`GrainController` so grain adapts to observed steals."""
+        return GrainPlan()
 
     def __repr__(self):  # pragma: no cover - debug aid
         return f"{type(self).__name__}()"
@@ -213,9 +300,13 @@ class DLBC(SchedPolicy):
     name = "dlbc"
 
     def __init__(self, serial_check_every: int = 1,
-                 caller_keeps_smallest: bool = True):
+                 caller_keeps_smallest: bool = True,
+                 grain: Optional[GrainController] = None):
         self.serial_check_every = serial_check_every
         self.caller_keeps_smallest = caller_keeps_smallest
+        #: per-policy-instance adaptive grain state (steal feedback is
+        #: surface-local, like the rest of the policy's tuning knobs)
+        self.grain = grain or GrainController()
 
     def decide(self, pos, end, capacity):
         idle = capacity.idle()
@@ -228,6 +319,9 @@ class DLBC(SchedPolicy):
     def admit(self, idle, queued, total_slots):
         # continuous batching: spawn only into idle slots, every step
         return min(idle, queued)
+
+    def grain_plan(self, n, capacity, telemetry=None):
+        return self.grain.plan(n, capacity.total(), telemetry)
 
 
 class DCAFE(DLBC):

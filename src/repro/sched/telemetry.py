@@ -15,6 +15,7 @@ import math
 import threading
 from collections import deque
 from dataclasses import dataclass, field
+from itertools import islice
 from typing import Deque, Dict, Iterable, List
 
 #: Sliding window for latency samples: long-lived pools (the global data
@@ -59,7 +60,15 @@ class SchedTelemetry(SchedCounters):
 
     serial_items: int = 0     # items run in the serial fallback block
     parallel_items: int = 0   # items run inside spawned/caller chunks
-    steals: int = 0           # work-stealing executor only
+    steals: int = 0           # work-stealing executor only (whole + split)
+    splits: int = 0           # steals that split a range (adaptive grain):
+    #                           the thief took the back half of a stealable
+    #                           range; steals - splits = whole-task steals
+    #: which worker each steal victimised (work-stealing executor only);
+    #: sum of the histogram == steals at quiescence, and a rotating/
+    #: randomised victim scan spreads the keys instead of hammering
+    #: worker 0.  Bumped under ``lock`` like every cross-thread counter.
+    steal_victims: Dict[int, int] = field(default_factory=dict)
     completions: int = 0      # spawned tasks that finished (quiescence:
     #                           completions == spawns once every join fired)
     errors: int = 0           # spawned tasks that raised (contained by the
@@ -116,6 +125,24 @@ class SchedTelemetry(SchedCounters):
             except RuntimeError:  # deque mutated during copy; retry
                 continue
 
+    def recent_skew(self, n: int = 64, p: float = 90.0) -> float:
+        """Cost-skew estimate over the most recent ``n`` latency samples:
+        ``p``-th percentile / median (≥ 1.0 in practice; 1.0 when there
+        are too few samples to judge).  O(n) — the grain controller reads
+        this per loop, so it must not sort the whole window.  p90 rather
+        than p99: a single OS-preempted item must not make a uniform
+        loop look cost-skewed."""
+        while True:
+            try:
+                recent = list(islice(reversed(self.latencies), n))
+                break
+            except RuntimeError:  # deque mutated during copy; retry
+                continue
+        if len(recent) < 8:
+            return 1.0
+        p50 = percentile(recent, 50)
+        return percentile(recent, p) / p50 if p50 > 0 else 1.0
+
     def p50(self) -> float:
         return percentile(self._lat_snapshot(), 50)
 
@@ -131,10 +158,15 @@ class SchedTelemetry(SchedCounters):
             serial_items=self.serial_items,
             parallel_items=self.parallel_items,
             steals=self.steals,
+            splits=self.splits,
             n_latencies=len(self.latencies),
             p50_ms=round(self.p50() * 1e3, 3),
             p99_ms=round(self.p99() * 1e3, 3),
         )
+        if self.steal_victims:  # only the work-stealing executor grows it
+            out["steal_victims"] = {
+                str(w): c for w, c in sorted(self.steal_victims.items())
+            }
         if self.tenants:  # only multi-tenant surfaces grow the extra key
             out["tenants"] = {
                 name: dict(spawns=c.spawns, joins=c.joins)
@@ -149,6 +181,7 @@ class SchedTelemetry(SchedCounters):
         self.spawns = self.joins = self.barriers = self.steps = 0
         self.work = 0.0
         self.serial_items = self.parallel_items = self.steals = 0
-        self.completions = self.errors = 0
+        self.splits = self.completions = self.errors = 0
+        self.steal_victims = {}
         self.tenants = {}
         self.latencies = deque(maxlen=LATENCY_WINDOW)  # atomic rebind

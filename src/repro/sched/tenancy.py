@@ -151,6 +151,12 @@ class WeightedRefillPolicy(SchedPolicy):
     def admit(self, idle, queued, total_slots):
         return self.base.admit(idle, queued, total_slots)
 
+    def grain_plan(self, n, capacity, telemetry=None):
+        # host-side range work under a weighted policy chunks (and
+        # steal-splits) exactly like its base: tenancy only changes
+        # *whose* request fills a slot, never grain arithmetic
+        return self.base.grain_plan(n, capacity, telemetry)
+
     # -- the cross-tenant choice ---------------------------------------------
 
     def pick(self, registry: TenantRegistry,

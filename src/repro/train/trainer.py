@@ -51,6 +51,9 @@ class TrainerConfig:
     failure_at: Optional[int] = None  # simulate a crash after this step
     seed: int = 0
     ckpt_sched_policy: str = "dcafe"  # shard-write scheduling (repro.sched)
+    #: run checkpoint shard writes on the adaptive work-stealing executor
+    #: (steal-driven chunk splitting; grain from the policy's controller)
+    ckpt_stealing: bool = False
 
 
 @dataclass
@@ -87,7 +90,8 @@ def run_training(cfg: ModelConfig, shape: ShapeConfig,
     eval_fn = jax.jit(build_eval_loss(cfg, scfg)) if eval_loss_hook else None
 
     mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep,
-                            sched_policy=tcfg.ckpt_sched_policy)
+                            sched_policy=tcfg.ckpt_sched_policy,
+                            stealing=tcfg.ckpt_stealing)
     # Train-step surface telemetry: the step's static schedule (microbatch
     # chunks + reduction buckets, planned by scfg.sched_policy) counted per
     # executed step; latencies are step wall times.

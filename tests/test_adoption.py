@@ -62,6 +62,55 @@ def test_ckpt_async_save_overlaps_and_joins_once(tmpdir):
         mgr.close()
 
 
+def test_ckpt_stealing_executor_same_contract(tmpdir):
+    """The adaptive work-stealing substrate is a drop-in for the shard
+    writes: one escaped join per save, atomic publish, identical restore
+    — with the grain decided by the policy's controller (spawns stay
+    O(ranges), bounded by the shard count)."""
+    from repro.sched import WorkStealingExecutor
+
+    mgr = CheckpointManager(tmpdir, sched_policy="dcafe", stealing=True)
+    try:
+        mgr.save(7, _tree(), blocking=True)
+        assert isinstance(mgr.executor, WorkStealingExecutor)
+        t = mgr.telemetry
+        assert t.joins == 1
+        assert 1 <= t.spawns <= 24  # ranges (+ any splits), not per-shard
+        assert t.completions == t.spawns
+        assert mgr.latest_step() == 7
+        step, out = mgr.restore()
+        assert step == 7
+        np.testing.assert_array_equal(
+            np.asarray(out["layer_5"]["w"]), np.full((32, 32), 5.0))
+    finally:
+        mgr.close()
+
+
+def test_global_pool_stealing_opt_in(monkeypatch):
+    """``global_pool(stealing=True)`` serves the work-stealing substrate
+    through the same wrapper surface (first creation wins)."""
+    import repro.data.pool as pool_mod
+
+    monkeypatch.setattr(pool_mod, "_GLOBAL", None)
+    pool = pool_mod.global_pool(n_workers=2, stealing=True)
+    try:
+        assert isinstance(pool, pool_mod.StealingPool)
+        done = []
+        import threading
+        lock = threading.Lock()
+
+        def fn(i):
+            with lock:
+                done.append(i)
+
+        pool.run_loop(list(range(20)), fn)
+        assert sorted(done) == list(range(20))
+        assert pool.stats.completions == pool.stats.spawns
+    finally:
+        pool.shutdown()
+        monkeypatch.setattr(pool_mod, "_GLOBAL", None)
+
+
 def test_ckpt_restore_only_manager_spawns_no_pool(tmpdir):
     """The I/O pool is lazy: a manager used only for restore/inspection
     never starts worker threads (and close() is a no-op)."""

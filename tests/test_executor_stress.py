@@ -16,15 +16,25 @@ counter increment shows up there as a phantom regression.  Invariants:
   containment, a raising task silently killed its worker thread and
   every later join of a full pool would hang).
 
-Deterministic: fixed producer/task counts and injection pattern; the only
-waits are bounded event waits on work the pool must finish.
+The work-stealing lanes add the adaptive-grain invariants: *work
+conservation across splits* (every index of every range executes exactly
+once no matter how thieves and helpers carved it up) and *locked-counter
+consistency* (``steals == sum(steal_victims)``, ``splits <= steals`` —
+the counters are bumped under ``telemetry.lock``, so concurrent steals
+must never lose an increment).
+
+Deterministic: fixed producer/task counts, seeded cost patterns and a
+fixed injection pattern; the only waits are bounded event waits on work
+the pool must finish.
 """
 
+import random
 import threading
+import time
 
 import pytest
 
-from repro.sched import ThreadExecutor, WorkStealingExecutor
+from repro.sched import DCAFE, DLBC, ThreadExecutor, WorkStealingExecutor
 
 EXECUTORS = [ThreadExecutor, WorkStealingExecutor]
 N_PRODUCERS = 4
@@ -147,6 +157,135 @@ def test_run_loop_spawned_chunk_survives_raising_item(cls):
         assert sorted(attempted) == list(range(30))  # nothing dropped
         assert ex.telemetry.errors == len(range(0, 30, 3))
         assert ex.telemetry.parallel_items == 30
+    finally:
+        ex.shutdown()
+
+
+def _steal_counters_consistent(t):
+    """PR-3 locked-counter contract, extended to the steal counters: the
+    histogram must add up to the steal count exactly (both are bumped in
+    the same ``telemetry.lock`` hold), and splits are a subset of
+    steals."""
+    assert t.steals == sum(t.steal_victims.values()), (
+        t.steals, dict(t.steal_victims))
+    assert 0 <= t.splits <= t.steals
+    assert all(v >= 0 for v in t.steal_victims.values())
+
+
+def test_work_stealing_skewed_ranges_conserve_work():
+    """N producers × seeded skewed range loops on ONE stealing pool, with
+    injected exceptions: every index of every producer's range executes
+    exactly once — across however many steal-splits and helper claims
+    carved it — one join per scope, spawns == completions, and the steal
+    counters stay consistent under concurrent bumping."""
+    n_items = 48
+    rng = random.Random(0xDCAFE)
+    # seeded skewed costs: a contiguous heavy head per producer, heavy
+    # positions jittered so producers collide on different workers
+    costs = {}
+    for p in range(N_PRODUCERS):
+        head = rng.randrange(4, 10)
+        costs[p] = [1.5 if i < head else 0.1 for i in range(n_items)]
+
+    ex = WorkStealingExecutor(n_workers=3)
+    try:
+        lock = threading.Lock()
+        seen = []
+
+        def boom():
+            raise RuntimeError("injected")
+
+        def produce(p):
+            def fn(item):
+                pp, i = item
+                time.sleep(costs[pp][i] / 1e3)
+                with lock:
+                    seen.append(item)
+
+            items = [(p, i) for i in range(n_items)]
+            # DCAFE = DLBC chunking + escaped joins; per-producer grain
+            # controller adapts across the three loops
+            policy = DCAFE()
+            with ex.finish() as scope:
+                for _ in range(3):
+                    # injected failures ride along as scoped single tasks
+                    # (caller-chunk raises would abort the loop like a
+                    # plain for loop — that contract has its own test)
+                    scope.add([ex.submit(boom), ex.submit(boom)])
+                    ex.run_loop(items, fn, policy=policy, scope=scope)
+
+        _run_producers(produce)
+        want = sorted((p, i) for p in range(N_PRODUCERS)
+                      for i in range(n_items)) * 3
+        assert sorted(seen) == sorted(want)  # exactly once per loop
+        t = ex.telemetry
+        assert t.joins == N_PRODUCERS  # one join per scope, 3 loops each
+        assert t.completions == t.spawns
+        assert t.serial_items + t.parallel_items == len(want)
+        assert t.errors == N_PRODUCERS * 3 * 2  # every boom contained
+        _steal_counters_consistent(t)
+        assert set(t.steal_victims) <= set(range(ex.n_workers))
+        assert ex.idle_workers() == ex.n_workers
+    finally:
+        ex.shutdown()
+
+
+def test_work_stealing_victim_scan_not_worker0_hotspot():
+    """The steal-victim scan starts at a randomised index: over many
+    forced steals the histogram must hit more than one victim (the old
+    deterministic scan always hammered the lowest live worker id)."""
+    ex = WorkStealingExecutor(n_workers=4)
+    try:
+        lock = threading.Lock()
+        ran = []
+
+        def fn(i):
+            time.sleep(0.002)  # heavy enough that thieves must split
+            with lock:
+                ran.append(i)
+
+        for _ in range(6):
+            ex.run_loop(list(range(24)), fn, policy=DLBC())
+        t = ex.telemetry
+        assert sorted(ran) == sorted(list(range(24)) * 6)
+        _steal_counters_consistent(t)
+        if t.steals >= 8:  # enough samples to judge the spread
+            assert len(t.steal_victims) > 1, dict(t.steal_victims)
+    finally:
+        ex.shutdown()
+
+
+def test_work_stealing_producers_of_single_tasks_rebalance():
+    """N producers × M single submits (1-item ranges): whole-task
+    stealing still drains everything, latches all fire, and the counter
+    contract holds — the grain machinery must not strand scalar tasks."""
+    ex = WorkStealingExecutor(n_workers=3)
+    try:
+        lock = threading.Lock()
+        ran = []
+        events = {}
+
+        def produce(p):
+            evs = []
+            for i in range(M_TASKS):
+                def task(p=p, i=i):
+                    with lock:
+                        ran.append((p, i))
+                    if i % RAISE_EVERY == 0:
+                        raise ValueError(f"injected {p}/{i}")
+
+                evs.append(ex.submit(task))
+            with lock:
+                events[p] = evs
+
+        _run_producers(produce)
+        for p, evs in events.items():
+            for i, ev in enumerate(evs):
+                assert ev.wait(timeout=30), f"lost task {p}/{i}"
+        t = ex.telemetry
+        assert t.spawns == t.completions == N_PRODUCERS * M_TASKS
+        assert t.errors == N_PRODUCERS * len(range(0, M_TASKS, RAISE_EVERY))
+        _steal_counters_consistent(t)
     finally:
         ex.shutdown()
 

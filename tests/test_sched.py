@@ -6,9 +6,9 @@ import threading
 import pytest
 
 from repro.sched import (
-    DCAFE, DLBC, LC, ChunkPlan, FixedCapacity, Serial, SlotExecutor,
-    ThreadExecutor, WorkStealingExecutor, chunk_plan, get_policy, percentile,
-    static_plan,
+    DCAFE, DLBC, LC, ChunkPlan, FixedCapacity, GrainController, GrainPlan,
+    RangeLatch, Serial, SlotExecutor, ThreadExecutor, WorkStealingExecutor,
+    chunk_plan, get_policy, percentile, static_plan,
 )
 from repro.sched.telemetry import SchedTelemetry
 
@@ -78,6 +78,98 @@ def test_static_plan_ceil_chunks():
             pos = b
         assert pos == hi
         assert len(plan.spawned) <= nchunks
+
+
+# ---------------------------------------------------------------------------
+# Grain plans (adaptive work stealing)
+# ---------------------------------------------------------------------------
+
+
+def test_grain_controller_initial_grain_formula():
+    """initial = ceil(n / (k·workers)), floored at min_grain."""
+    c = GrainController(k=2, min_grain=1)
+    assert c.plan(64, 4).initial == 8
+    assert c.plan(65, 4).initial == 9   # ceil
+    assert c.plan(3, 4).initial == 1
+    assert c.plan(0, 4).initial is None  # nothing to carve
+    c = GrainController(k=1, min_grain=4)
+    assert c.plan(10, 8).initial == 4   # min_grain floor
+
+
+def test_grain_controller_validates():
+    with pytest.raises(ValueError):
+        GrainController(k=0)
+    with pytest.raises(ValueError):
+        GrainController(k=4, k_max=2)
+
+
+def test_grain_controller_escalates_on_skewed_steals_only():
+    """The feedback loop: a steal burst with skewed item costs halves the
+    grain (k doubles); the same burst with uniform costs is churn and
+    must decay k back instead."""
+    tel = SchedTelemetry()
+    for ms in (1.0, 1.0, 1.0, 5.0) * 8:      # skewed: p90/p50 = 5
+        tel.record_latency(ms / 1e3)
+    c = GrainController(k=1, k_max=8)
+    c.plan(64, 4, tel)                        # first read: baseline only
+    tel.steals += 10                          # hungry workers, skewed costs
+    c.plan(64, 4, tel)
+    assert c.k == 2
+    tel.steals += 10
+    c.plan(64, 4, tel)
+    assert c.k == 4
+
+    # now uniform latencies: steals keep coming but they are churn
+    tel.latencies.clear()
+    for _ in range(64):
+        tel.record_latency(1e-3)
+    tel.steals += 10
+    c.plan(64, 4, tel)
+    assert c.k == 3                           # decays toward k0
+    for _ in range(3):
+        tel.steals += 10
+        c.plan(64, 4, tel)
+    assert c.k == 1                           # back to coarse
+
+
+def test_dlbc_grain_plan_routes_through_controller():
+    cap = FixedCapacity(idle_n=3, total_n=4)
+    pol = DLBC(grain=GrainController(k=2, split_min=3))
+    gp = pol.grain_plan(64, cap)
+    assert gp == GrainPlan(initial=8, split_min=3)
+    # base policies keep whole-chunk lazily-split ranges
+    assert Serial().grain_plan(64, cap) == GrainPlan()
+    assert LC().grain_plan(64, cap) == GrainPlan()
+    assert DCAFE().grain_plan(64, cap).initial is not None  # inherits DLBC
+
+
+def test_wdlbc_grain_plan_delegates_to_base():
+    from repro.sched.tenancy import WeightedRefillPolicy
+
+    cap = FixedCapacity(idle_n=3, total_n=4)
+    w = WeightedRefillPolicy(base=DLBC(grain=GrainController(k=4)))
+    assert w.grain_plan(64, cap) == GrainPlan(initial=4, split_min=2)
+
+
+def test_range_latch_counts_down_and_is_event_compatible():
+    latch = RangeLatch(3)
+    assert not latch.is_set()
+    latch.discharge(2)
+    assert not latch.wait(timeout=0.01)
+    latch.discharge(1)
+    assert latch.is_set() and latch.wait(timeout=0)
+    assert RangeLatch(0).is_set()  # empty range joins immediately
+
+
+def test_telemetry_recent_skew():
+    tel = SchedTelemetry()
+    assert tel.recent_skew() == 1.0  # too few samples to judge
+    for _ in range(32):
+        tel.record_latency(1e-3)
+    assert tel.recent_skew() == pytest.approx(1.0)
+    for _ in range(8):
+        tel.record_latency(10e-3)  # a recent heavy tail
+    assert tel.recent_skew() > 2.0
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +276,27 @@ def test_dlbc_pool_wrapper_is_thread_executor():
         assert isinstance(pool, ThreadExecutor)
     finally:
         pool.shutdown()
+
+
+def test_run_loop_by_name_policy_state_persists():
+    """By-name policies are cached per executor, so the DLBC grain
+    controller's steal-feedback baseline survives across loops — a
+    fresh instance per loop would make the adaptive-grain feedback
+    structurally inert on every zero-config surface."""
+    ex = WorkStealingExecutor(n_workers=2)
+    try:
+        ex.run_loop(list(range(8)), lambda i: None)          # None → dlbc
+        ex.run_loop(list(range(8)), lambda i: None, policy="dlbc")
+        pol = ex._policy_cache["dlbc"]
+        assert isinstance(pol, DLBC)
+        # the controller observed the first loops: baseline recorded
+        assert pol.grain._last_steals is not None
+        # instance-passed policies are untouched by the cache
+        mine = DLBC()
+        ex.run_loop(list(range(8)), lambda i: None, policy=mine)
+        assert ex._policy_cache["dlbc"] is pol
+    finally:
+        ex.shutdown()
 
 
 def test_work_stealing_executor_runs_all_items():
