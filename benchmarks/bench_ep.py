@@ -1,0 +1,147 @@
+"""Expert-parallel vs data-parallel MoE dispatch (repro.ep).
+
+Runs the ``ep_dispatch_combine`` round on a 2-shard ``expert`` mesh
+against the single-host ``dispatch_combine`` baseline, under a
+perfectly balanced round-robin router and a hot-expert skew, and emits
+the shared spawn/join/drop + exchange telemetry so the ``ep.json`` and
+``moe_dispatch.json`` artifacts are directly comparable in CI.
+
+Gates (asserted here AND re-checked from the JSON artifact in CI):
+
+* **AFE** — every EP round performs exactly ONE join
+  (``joins == rounds``): the all-to-all round has a single barrier, no
+  per-expert or per-shard synchronization.
+* **DLBC** — zero dropped tokens on the balanced router at
+  ``capacity_factor >= 1.0`` (the exchange plan reassigns residuals
+  instead of dropping per-shard).
+
+The expert shards are XLA host devices
+(``--xla_force_host_platform_device_count``), so the wall-clock column
+is a *smoke* trajectory (collective mechanics, not ICI bandwidth); the
+run happens in a subprocess so the device-count override never leaks
+into sibling benchmarks.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from .common import report
+
+INNER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import dataclasses, json, time
+    import jax, jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.distributed.sharding import mesh_context
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import moe as MOE
+    from repro.ep.dispatch import ep_round
+    from repro.sched import SchedTelemetry
+
+    T, CF = 256, 1.0
+    cfg0 = dataclasses.replace(get_config("mixtral-8x7b", smoke=True),
+                               moe_capacity_factor=CF)
+    E, K, d = cfg0.n_experts, cfg0.top_k, cfg0.d_model
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg0, jnp.float32)
+
+    # Balanced router: logits read the first E input dims (identity
+    # router) and token t prefers experts (t%E, (t+1)%E) -- every expert
+    # sees exactly T*K/E pairs, every lane exactly T_local*K/S.
+    p_bal = dict(p)
+    p_bal["router"] = jnp.zeros((d, E), jnp.float32).at[
+        jnp.arange(E), jnp.arange(E)].set(1.0)
+    xb = jnp.zeros((T, d), jnp.float32)
+    t = jnp.arange(T)
+    xb = xb.at[t, t % E].set(3.0).at[t, (t + 1) % E].set(2.0)
+    xb = xb + 0.01 * jax.random.normal(jax.random.PRNGKey(1), (T, d))
+
+    # Hot-expert skew: the stock router biased hard toward expert 0.
+    p_hot = dict(p)
+    p_hot["router"] = p["router"].at[:, 0].add(4.0)
+    xh = jax.random.normal(jax.random.PRNGKey(2), (T, d))
+
+    def timed(fn, iters=3):
+        f = jax.jit(fn)
+        jax.block_until_ready(f())  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(f())
+        return (time.perf_counter() - t0) / iters * 1e3
+
+    records = []
+    mesh = make_test_mesh(data=1, model=1, expert=2)
+    for router, pp, xx in (("balanced", p_bal, xb), ("hot", p_hot, xh)):
+        # --- data-parallel baseline (single-host two-round dispatch) ---
+        cfg = dataclasses.replace(cfg0, moe_dispatch="dlbc")
+        y, st = MOE.moe_apply(pp, cfg, xx, return_stats=True)
+        ms = timed(lambda: MOE.moe_apply(pp, cfg, xx))
+        records.append(dict(
+            arm="dp", router=router, capacity_factor=CF, ms=ms,
+            spawns=int(st["spawns"]), joins=int(st["joins"]),
+            rounds=int(st["rounds"]),
+            dropped_frac=float(st["dropped_frac"])))
+        # --- expert-parallel all-to-all over 2 shards ------------------
+        ecfg = dataclasses.replace(cfg, expert_parallel=True)
+        tel = SchedTelemetry()
+        with mesh_context(mesh):
+            y, st = ep_round(pp, ecfg, xx, mesh=mesh, telemetry=tel)
+            ms = timed(lambda: MOE.moe_apply(pp, ecfg, xx))
+        records.append(dict(
+            arm="ep", router=router, capacity_factor=CF, ms=ms,
+            spawns=st["spawns"], joins=tel.joins,
+            rounds=tel.exchange.rounds,
+            dropped_frac=st["dropped_frac"], sent=st["sent"],
+            received=st["received"], reassigned=st["reassigned"],
+            dropped=st["dropped"], n_shards=st["n_shards"],
+            lane_capacity=st["lane_capacity"]))
+    print("RESULT " + json.dumps(records))
+""")
+
+
+def run():
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", INNER], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=root)
+    assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-3000:]
+    records = None
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            records = json.loads(line[len("RESULT "):])
+    assert records is not None, "no RESULT line:\n" + out.stdout[-3000:]
+
+    # --- gates (also re-checked from ep.json in CI) ---------------------
+    for r in (r for r in records if r["arm"] == "ep"):
+        assert r["joins"] == r["rounds"] == 1, (
+            f"AFE regressed: EP round made {r['joins']} joins over "
+            f"{r['rounds']} rounds on the {r['router']} router")
+        assert r["sent"] == r["received"], r
+    bal = next(r for r in records
+               if r["arm"] == "ep" and r["router"] == "balanced")
+    assert bal["dropped"] == 0 and bal["dropped_frac"] == 0.0, (
+        f"balanced router dropped {bal['dropped']} pairs at "
+        f"capacity_factor {bal['capacity_factor']} — the exchange plan "
+        "must reassign residuals, not drop them")
+
+    rows = [[r["arm"], r["router"], f"{r['ms']:.1f}",
+             r["spawns"], r["joins"], f"{r['dropped_frac']:.4f}",
+             r.get("reassigned", "-"), r.get("dropped", "-")]
+            for r in records]
+    report("EP vs DP MoE dispatch (2 expert shards, smoke devices)",
+           rows, ["arm", "router", "ms", "spawns", "joins",
+                  "dropped_frac", "reassigned", "dropped"],
+           "ep", records)
+    return records
+
+
+if __name__ == "__main__":
+    run()

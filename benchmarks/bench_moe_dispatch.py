@@ -1,5 +1,10 @@
 """DLBC vs LC MoE dispatch (paper §3.2 in its MoE form): dropped-token
-fraction across capacity factors and input skews."""
+fraction across capacity factors and input skews.
+
+Records speak the shared spawn/join/drop telemetry vocabulary (one row
+per policy, same field names as ``bench_ep``/``bench_adoption``), so
+the ``moe_dispatch.json`` and ``ep.json`` CI artifacts are directly
+comparable."""
 
 from __future__ import annotations
 
@@ -35,11 +40,19 @@ def run():
                                           moe_capacity_factor=cf)
                 _, stats = MOE.moe_apply(p, cfg, x, return_stats=True)
                 drop[dispatch] = float(stats["dropped_frac"])
+                # one record per policy in the shared telemetry
+                # vocabulary (spawns + dropped == T*K pairs; joins is
+                # the single gate-combine regardless of rounds)
+                records.append(dict(
+                    arm=dispatch, capacity_factor=cf,
+                    clusters=skew_clusters,
+                    spawns=int(stats["spawns"]),
+                    joins=int(stats["joins"]),
+                    rounds=int(stats["rounds"]),
+                    dropped_frac=float(stats["dropped_frac"])))
             rows.append([cf, skew_clusters,
                          f"{drop['lc']:.3f}", f"{drop['dlbc']:.3f}",
                          f"{(drop['lc'] - drop['dlbc']):+.3f}"])
-            records.append(dict(capacity_factor=cf, clusters=skew_clusters,
-                                lc_drop=drop["lc"], dlbc_drop=drop["dlbc"]))
     report("MoE dispatch: dropped-token fraction (lower is better)",
            rows, ["cap_factor", "skew_clusters", "LC", "DLBC", "delta"],
            "moe_dispatch", records)

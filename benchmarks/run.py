@@ -8,6 +8,8 @@ One benchmark per paper table/figure plus the TPU-side analogues:
   fig13      — simulated energy                             (paper Fig. 13)
   sync       — HLO collectives per AFE sync policy          (Fig. 10 on TPU)
   moe        — DLBC vs LC MoE dispatch drop rates           (§3.2 on TPU)
+  ep         — expert-parallel all-to-all dispatch vs data-parallel:
+               exchange telemetry + the one-join-per-round AFE gate
   batcher    — DLBC continuous batching vs LC fixed batches (§3.2 serving)
   tenants    — multi-tenant serving: weighted-DLBC isolation under bursts
   sched      — repro.sched policy ladder on the host pool (uniform/skewed)
@@ -23,14 +25,15 @@ import sys
 import time
 
 from . import (
-    bench_adoption, bench_batcher, bench_design_choices, bench_fig10_counts,
-    bench_fig11_speedup, bench_fig12_schemes, bench_fig13_energy,
-    bench_grain, bench_moe_dispatch, bench_roofline, bench_sched,
-    bench_sync_policy, bench_tenants,
+    bench_adoption, bench_batcher, bench_design_choices, bench_ep,
+    bench_fig10_counts, bench_fig11_speedup, bench_fig12_schemes,
+    bench_fig13_energy, bench_grain, bench_moe_dispatch, bench_roofline,
+    bench_sched, bench_sync_policy, bench_tenants,
 )
 
 ALL = {
     "adoption": bench_adoption.run,
+    "ep": bench_ep.run,
     "grain": bench_grain.run,
     "fig10": bench_fig10_counts.run,
     "fig11": bench_fig11_speedup.run,

@@ -31,6 +31,10 @@ class ModelConfig:
     top_k: int = 0
     moe_capacity_factor: float = 1.25
     moe_dispatch: str = "dlbc"  # "lc" (static GShard) | "dlbc" (two-round)
+    #: opt in to expert-parallel all-to-all dispatch (repro.ep): taken
+    #: when the mesh carves an "expert" axis that divides E and T,
+    #: otherwise falls back to the single-host dispatch path
+    expert_parallel: bool = False
     # --- SSM (mamba1) ---
     ssm_state: int = 0
     d_inner: int = 0

@@ -3,7 +3,10 @@
 Mesh axes (launch/mesh.py): single-pod ``("data", "model")`` = (16, 16);
 multi-pod ``("pod", "data", "model")`` = (2, 16, 16).  ``"pod"`` extends
 the data axis (gradient sync crosses pods; TP stays intra-pod — ICI-aware
-placement).
+placement).  An optional ``"expert"`` axis (carved out of the data axis,
+``make_production_mesh(expert=S)``) enables expert-parallel all-to-all
+MoE dispatch (repro.ep): expert weights shard E over it and tokens are
+exchanged between expert shards intra-pod.
 
 Param rules (per tensor-role, applied by pytree path):
 
@@ -11,8 +14,10 @@ Param rules (per tensor-role, applied by pytree path):
 * attention qkv: d_model(in) → fsdp, heads(out) → model (Megatron TP)
 * attention out: heads(in) → model, d_model(out) → fsdp
 * mlp w1/w3: d → fsdp, ff → model;  w2: ff → model, d → fsdp
-* MoE experts: E → model when E % model_size == 0 (expert parallelism),
-  else ff → model (TP inside experts)
+* MoE experts: E → "expert" when the mesh carves a dedicated expert
+  axis that divides E (repro.ep all-to-all dispatch); else E → model
+  when E % model_size == 0 (expert parallelism on the TP axis), else
+  ff → model (TP inside experts)
 * mamba: d_inner → model (heads-analog), d_model → fsdp
 * norms/scalars: replicated
 * stacked layer dim (leading L): never sharded
@@ -38,6 +43,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _MESH_CTX: contextvars.ContextVar = contextvars.ContextVar(
     "repro_mesh", default=None)
 
+#: The one copy of the expert-parallel mesh-axis name (repro.ep and
+#: launch.mesh import it; a drifting literal would silently disable the
+#: EP dispatch path).
+EXPERT_AXIS = "expert"
+
 
 @contextlib.contextmanager
 def mesh_context(mesh: Optional[Mesh]):
@@ -62,6 +72,21 @@ def fsdp_axes(mesh: Optional[Mesh] = None):
     if mesh is None:
         return ("data",)
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def expert_axis_size(mesh: Optional[Mesh] = None) -> int:
+    """Size of the dedicated expert-parallel axis (0 when the mesh does
+    not carve one — the single-host MoE dispatch path)."""
+    mesh = mesh or current_mesh()
+    if mesh is None or EXPERT_AXIS not in mesh.axis_names:
+        return 0
+    return dict(mesh.shape)[EXPERT_AXIS]
+
+
+def _model_size(mesh: Mesh) -> int:
+    """TP axis size; 1 for meshes without a "model" axis (e.g. an
+    expert-only EP test mesh)."""
+    return dict(mesh.shape).get("model", 1)
 
 
 def shard(x, *spec):
@@ -98,12 +123,12 @@ def shard_act(x):
     if mesh is None or x.ndim != 3:
         return x
     fa = fsdp_axes(mesh)
-    msize = mesh.shape["model"]
+    msize = _model_size(mesh)
     dsize = 1
     for a in fa:
         dsize *= mesh.shape[a]
-    b_ax = fa if x.shape[0] % dsize == 0 else None
-    s_ax = "model" if x.shape[1] % msize == 0 else None
+    b_ax = fa if fa and x.shape[0] % dsize == 0 else None
+    s_ax = "model" if msize > 1 and x.shape[1] % msize == 0 else None
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(b_ax, s_ax, None)))
 
@@ -115,12 +140,12 @@ def shard_logits(x):
     if mesh is None:
         return x
     fa = fsdp_axes(mesh)
-    msize = mesh.shape["model"]
+    msize = _model_size(mesh)
     dsize = 1
     for a in fa:
         dsize *= mesh.shape[a]
-    b_ax = fa if x.shape[0] % dsize == 0 else None
-    v_ax = "model" if x.shape[-1] % msize == 0 else None
+    b_ax = fa if fa and x.shape[0] % dsize == 0 else None
+    v_ax = "model" if msize > 1 and x.shape[-1] % msize == 0 else None
     spec = P(b_ax, None, v_ax) if x.ndim == 3 else P(b_ax, v_ax)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
@@ -131,7 +156,7 @@ def shard_logits(x):
 
 
 def _role_spec(path: str, shape: tuple, cfg, dp_shard: bool,
-               model_size: int) -> P:
+               model_size: int, expert_size: int = 0) -> P:
     """PartitionSpec for one param; ``path`` is '/'-joined pytree keys.
     Leading stacked-layer dims (added by the L-stacking) are detected by
     comparing ndim with the role's base rank and left unsharded."""
@@ -156,6 +181,19 @@ def _role_spec(path: str, shape: tuple, cfg, dp_shard: bool,
     if "/moe/" in path or path.startswith("moe/"):
         if "router" in path:
             return pad((fa, None), nd)
+        # A dedicated expert axis (repro.ep all-to-all dispatch) wins:
+        # E shards over "expert" and the TP axis stays free for d_ff.
+        # Gated on the config opting in: a mesh may carve the axis while
+        # a model keeps single-host dispatch, and expert-sharded weights
+        # under the single-host gather would hand GSPMD exactly the
+        # guess-a-reshard case repro.ep exists to avoid.
+        if cfg.n_experts > 0 and expert_size > 0 and \
+                getattr(cfg, "expert_parallel", False) and \
+                cfg.n_experts % expert_size == 0:
+            if "w1" in path or "w3" in path:
+                return pad((EXPERT_AXIS, fa, M), nd)   # (E, d, f)
+            if "w2" in path:
+                return pad((EXPERT_AXIS, M, fa), nd)   # (E, f, d)
         ep = cfg.n_experts > 0 and model_size > 0 and \
             cfg.n_experts % model_size == 0
         if "w1" in path or "w3" in path:
@@ -197,12 +235,14 @@ def _role_spec(path: str, shape: tuple, cfg, dp_shard: bool,
 def param_specs_tree(shapes_tree, cfg, *, dp_shard: bool = True):
     """Map a ShapeDtypeStruct pytree to PartitionSpecs (same structure)."""
     mesh = current_mesh()
-    model_size = mesh.shape["model"] if mesh is not None else 0
+    model_size = _model_size(mesh) if mesh is not None else 0
+    expert_size = expert_axis_size(mesh)
 
     def walk(node, path):
         if isinstance(node, dict):
             return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
-        return _role_spec(path, node.shape, cfg, dp_shard, model_size)
+        return _role_spec(path, node.shape, cfg, dp_shard, model_size,
+                          expert_size)
 
     return walk(shapes_tree, "")
 

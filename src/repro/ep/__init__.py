@@ -1,0 +1,31 @@
+"""repro.ep — expert-parallel all-to-all dispatch.
+
+The DCAFE ideas generalised across expert shards (ROADMAP: the
+dispatch-buffer lever left open after the token-dim-sharding hypothesis
+was refuted — EXPERIMENTS.md §Perf):
+
+* :mod:`repro.ep.plan` — **DLBC as exchange planning**: the all-to-all
+  send/recv count matrix (`ExchangePlan`) built from router assignments
+  with the canonical ``chunk_plan`` arithmetic; over-capacity residuals
+  are *reassigned* to expert shards with idle lane capacity before the
+  collective instead of dropped per-shard.
+* :mod:`repro.ep.collective` — the token exchange over the ``expert``
+  mesh axis: capacity-padded lane buffers through ``jax.lax.all_to_all``
+  (or a ``ppermute`` rotation ring), inside ``shard_map``.
+* :mod:`repro.ep.dispatch` — **AFE as the round barrier**:
+  ``ep_dispatch_combine`` (shard-local route → all-to-all → per-shard
+  expert FFN → all-to-all combine) synchronises ONCE per dispatch round
+  — ``ep_round`` runs it under a DCAFE ``FinishScope`` so telemetry
+  proves ``joins == rounds``, with no per-expert or per-shard joins.
+
+Consumers: ``repro.models.moe.moe_apply`` selects this path when the
+config sets ``expert_parallel`` and the mesh carves an ``expert`` axis
+(``launch.mesh.make_production_mesh(expert=...)``); ``bench_ep`` gates
+the AFE join invariant and the zero-drop balanced-router claim in CI.
+"""
+
+from .collective import (  # noqa: F401
+    EXPERT_AXIS, exchange, expert_axis_size, has_expert_axis, token_shards,
+)
+from .plan import ExchangePlan, lane_capacity, plan_exchange  # noqa: F401
+from .dispatch import ep_dispatch_combine, ep_round  # noqa: F401

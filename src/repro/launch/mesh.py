@@ -14,15 +14,39 @@ from __future__ import annotations
 
 import jax
 
+from ..distributed.sharding import EXPERT_AXIS
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+
+def make_production_mesh(*, multi_pod: bool = False, expert: int = 0):
+    """``expert > 0`` carves an expert-parallel axis out of the *data*
+    axis (16 must divide by it): tokens are exchanged between expert
+    shards over intra-pod ICI while gradient sync stays the only
+    cross-pod traffic — axes ``("expert", data/expert, "model")``
+    (with a leading ``"pod"`` when multi-pod).  MoE expert weights
+    shard E over "expert" (distributed/sharding.py) and
+    ``moe_apply`` takes the repro.ep all-to-all dispatch path."""
+    data = 16
+    if expert:
+        if data % expert:
+            raise ValueError(
+                f"expert axis {expert} must divide the data axis {data}")
+        shape = (2, expert, data // expert, 16) if multi_pod else \
+            (expert, data // expert, 16)
+        axes = ("pod", EXPERT_AXIS, "data", "model") if multi_pod else \
+            (EXPERT_AXIS, "data", "model")
+        return jax.make_mesh(shape, axes)
+    shape = (2, data, 16) if multi_pod else (data, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
-def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0,
+                   expert: int = 0):
     """Small mesh for CI (requires xla_force_host_platform_device_count)."""
+    shape, axes = (), ()
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
-    return jax.make_mesh((data, model), ("data", "model"))
+        shape, axes = (pod,), ("pod",)
+    if expert:
+        shape, axes = shape + (expert,), axes + (EXPERT_AXIS,)
+    shape, axes = shape + (data, model), axes + ("data", "model")
+    return jax.make_mesh(shape, axes)

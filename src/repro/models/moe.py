@@ -89,6 +89,41 @@ def _expert_load(expert_ids: jnp.ndarray, mask: jnp.ndarray, E: int):
         * mask.reshape(-1)[:, None], axis=0)
 
 
+def dlbc_reroute(ids, gates, probs, pos1, keep1, load, provider,
+                 n_groups: int, expert_open, group_of=None):
+    """The DLBC round-2 re-route, shared by single-host dispatch (a
+    "group" is an expert) and EP lane planning (a group is an expert
+    *shard* — :mod:`repro.ep.dispatch`, where any change to this idiom
+    must keep the EP ↔ single-host equivalence tests green).
+
+    Overflow (token, choice) pairs re-route once to the token's best
+    expert among ``expert_open`` (the (E,) availability mask derived
+    from the provider's residual), take positions after the ``load``
+    already admitted per group, and are re-admitted against the same
+    provider.  Returns ``(ids_f, group_f, pos_f, keep, gates_f,
+    overflow)`` — rerouted pairs weighted by the probability of the
+    expert that actually serves them (router-consistent combine).
+    """
+    group_of = group_of or (lambda i: i)
+    overflow = ~keep1                                  # (T, K)
+    avail = probs * expert_open[None, :]
+    alt_ids = jnp.argmax(avail, axis=-1).astype(jnp.int32)  # (T,)
+    ids2 = jnp.where(overflow, alt_ids[:, None], ids)
+    group2 = group_of(ids2)
+    pos2 = _positions_in_expert(
+        jnp.where(overflow, group2, n_groups),  # only overflow counts
+        n_groups + 1,
+        base=jnp.concatenate([load, jnp.zeros((1,), load.dtype)]))
+    ids_f = jnp.where(overflow, ids2, ids)
+    group_f = jnp.where(overflow, group2, group_of(ids))
+    pos_f = jnp.where(overflow, pos2, pos1)
+    keep = provider.admit_mask(pos_f)
+    alt_gate = jnp.take_along_axis(probs, ids_f.astype(jnp.int32),
+                                   axis=-1).astype(gates.dtype)
+    gates_f = jnp.where(overflow, alt_gate, gates)
+    return ids_f, group_f, pos_f, keep, gates_f, overflow
+
+
 def route(x: jnp.ndarray, router_w: jnp.ndarray, top_k: int):
     """x: (T, d) → (gates (T,K) fp32, expert_ids (T,K) int32, full probs)."""
     logits = x.astype(jnp.float32) @ router_w
@@ -105,14 +140,39 @@ def moe_apply(p: dict, cfg, x: jnp.ndarray,
     # constraining the flattened token dim to (data × model) sharding was
     # expected to shrink dispatch buffers 16×; measured: GSPMD reshards
     # the slot scatter/gather with MORE collectives (mixtral train_4k
-    # collective term 62 s → 158 s).  The principled fix is expert-parallel
-    # all-to-all dispatch (tokens exchanged between expert shards), left
-    # as the next lever with napkin math in §Perf.
+    # collective term 62 s → 158 s).  The principled fix is the
+    # expert-parallel all-to-all dispatch below (repro.ep): explicit
+    # token exchange between expert shards instead of letting the
+    # partitioner guess.
     orig_shape = x.shape
     if x.ndim == 3:
         x = x.reshape(-1, x.shape[-1])
     T, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
+    if cfg.expert_parallel:
+        # Expert-parallel all-to-all dispatch (repro.ep): taken when the
+        # mesh carves an "expert" axis whose size divides E (the same
+        # static predicate that shards expert weights E → "expert", so
+        # the single-host gather never runs over expert-sharded weights).
+        # A token count not divisible by S — ragged last serving batch —
+        # is zero-padded up to the next multiple and sliced back: at
+        # most S-1 pad tokens ride the round, a negligible capacity
+        # perturbation vs falling back to the resharded gather.
+        from ..distributed.sharding import current_mesh, expert_axis_size
+        mesh = current_mesh()
+        S = expert_axis_size(mesh)
+        if S > 1 and E % S == 0:
+            from ..ep.dispatch import ep_dispatch_combine
+            pad = (-T) % S
+            xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+            y, ep_stats = ep_dispatch_combine(
+                p, cfg, xp, mesh=mesh, use_kernel=use_kernel,
+                return_stats=True)
+            y = (y[:T] if pad else y).reshape(orig_shape)
+            if return_stats:
+                ep_stats["padded_tokens"] = pad
+                return y, ep_stats
+            return y
     C = capacity(T, E, K, cfg.moe_capacity_factor)
     cap = ExpertCapacityProvider(E, C)
     gates, ids, probs = route(x, p["router"], K)
@@ -136,23 +196,9 @@ def moe_apply(p: dict, cfg, x: jnp.ndarray,
         rounds = 2
         load = _expert_load(ids, keep1, E)          # (E,) used slots
         resid = cap.residual(load)                  # idle capacity
-        overflow = ~keep1                           # (T, K)
-        # next-best expert = argmax of probs weighted by residual capacity
-        avail = probs * (resid[None, :] > 0)
-        alt_ids = jnp.argmax(avail, axis=-1).astype(jnp.int32)  # (T,)
-        ids2 = jnp.where(overflow, alt_ids[:, None], ids)
-        pos2 = _positions_in_expert(
-            jnp.where(overflow, ids2, E),  # only overflow tokens count
-            E + 1, base=jnp.concatenate([load, jnp.zeros((1,), jnp.int32)]),
-        )
-        ids_final = jnp.where(overflow, ids2, ids)
-        pos_final = jnp.where(overflow, pos2, pos1)
-        keep = cap.admit_mask(pos_final)
-        # Rerouted tokens are weighted by the probability of the expert
-        # that actually serves them (router-consistent combine).
-        alt_gate = jnp.take_along_axis(probs, ids_final.astype(jnp.int32),
-                                       axis=-1).astype(gates.dtype)
-        gates_final = jnp.where(overflow, alt_gate, gates)
+        ids_final, _, pos_final, keep, gates_final, _ = dlbc_reroute(
+            ids, gates, probs, pos1, keep1, load, cap, E,
+            expert_open=resid > 0)
         y = dispatch_combine(x, gates_final, ids_final, pos_final, keep, E,
                              C, p, cfg.act, use_kernel=use_kernel)
         dropped = jnp.sum(~keep)

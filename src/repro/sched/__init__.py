@@ -46,4 +46,6 @@ from .executors import (  # noqa: F401
     FinishScope, RangeLatch, RangeTask, SlotExecutor, ThreadExecutor,
     WorkStealingExecutor,
 )
-from .telemetry import SchedCounters, SchedTelemetry, percentile  # noqa: F401
+from .telemetry import (  # noqa: F401
+    ExchangeCounters, SchedCounters, SchedTelemetry, percentile,
+)

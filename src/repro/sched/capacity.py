@@ -107,10 +107,28 @@ class ExpertCapacityProvider:
 
     def residual(self, load):
         """Idle slots per expert given the observed per-expert ``load``
-        (an (E,) array) — the capacity round-2 re-routing admits against."""
+        (an (E,) array) — the capacity round-2 re-routing admits against.
+
+        Clamped at zero: a load exceeding an expert's capacity (or the
+        provider's *total* capacity) yields zero idle slots, never a
+        negative residual that round-2 arithmetic would mis-admit
+        against.  The clamped excess is not silently lost — it is
+        reported by :meth:`overflow` as a dropped count (the EP exchange
+        planner consumes both sides of this split)."""
         import jax.numpy as jnp
 
         return jnp.maximum(self.slots_per_expert - load, 0)
+
+    def overflow(self, load):
+        """Per-expert dropped count: the positive part of
+        ``load - slots_per_expert`` — what the :meth:`residual` clamp
+        swallowed.  ``residual(load) - overflow(load)`` reconstructs the
+        raw (possibly negative) headroom, so conservation
+        ``sum(min(load, C)) + sum(overflow) == sum(load)`` holds even
+        when the total load exceeds :meth:`total` capacity."""
+        import jax.numpy as jnp
+
+        return jnp.maximum(load - self.slots_per_expert, 0)
 
 
 class SlotCapacity:

@@ -49,6 +49,28 @@ class SchedCounters:
 
 
 @dataclass
+class ExchangeCounters:
+    """Per-round expert-parallel all-to-all accounting (``repro.ep``):
+    how many (token, choice) pairs crossed the exchange, how many the
+    DLBC plan *reassigned* to an idle expert shard before the collective
+    (instead of dropping per-shard), and how many were dropped anyway.
+    ``rounds`` counts dispatch rounds; the AFE invariant gated in CI is
+    ``joins == rounds`` on the owning telemetry — ONE FinishScope join
+    per round, not one per expert or per shard."""
+
+    sent: int = 0         # (token, choice) pairs sent into the all-to-all
+    received: int = 0     # pairs received across all shards (== sent)
+    reassigned: int = 0   # overflow pairs re-planned to an idle shard
+    dropped: int = 0      # pairs no shard had capacity for
+    rounds: int = 0       # dispatch rounds (each = one escaped join)
+
+    def summary(self) -> Dict[str, int]:
+        return dict(sent=self.sent, received=self.received,
+                    reassigned=self.reassigned, dropped=self.dropped,
+                    rounds=self.rounds)
+
+
+@dataclass
 class SchedTelemetry(SchedCounters):
     """Counters + item accounting + latency distributions.
 
@@ -79,6 +101,10 @@ class SchedTelemetry(SchedCounters):
     #: conservation invariant — sum of per-tenant spawns/joins equals the
     #: global counters — is gated in CI (bench_tenants).
     tenants: Dict[str, SchedCounters] = field(default_factory=dict)
+    #: expert-parallel all-to-all accounting (``repro.ep``); only EP
+    #: dispatch surfaces grow it.  Bumped via :meth:`record_exchange`
+    #: under ``lock`` like every cross-thread counter.
+    exchange: ExchangeCounters = field(default_factory=ExchangeCounters)
     #: most recent samples only (bounded window — see LATENCY_WINDOW)
     latencies: Deque[float] = field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
@@ -114,6 +140,21 @@ class SchedTelemetry(SchedCounters):
             spawns=sum(c.spawns for c in self.tenants.values()),
             joins=sum(c.joins for c in self.tenants.values()),
         )
+
+    def record_exchange(self, *, sent: int = 0, received: int = 0,
+                        reassigned: int = 0, dropped: int = 0,
+                        rounds: int = 1):
+        """Fold one EP dispatch round's exchange counts in.  The caller
+        is responsible for the matching join (``repro.ep.dispatch`` runs
+        each round under a ``FinishScope``, so ``joins`` advances by
+        exactly one per round — the AFE invariant CI gates)."""
+        with self.lock:
+            ex = self.exchange
+            ex.sent += int(sent)
+            ex.received += int(received)
+            ex.reassigned += int(reassigned)
+            ex.dropped += int(dropped)
+            ex.rounds += int(rounds)
 
     def record_latency(self, seconds: float):
         self.latencies.append(seconds)  # GIL-atomic, no lock on the hot path
@@ -172,6 +213,8 @@ class SchedTelemetry(SchedCounters):
                 name: dict(spawns=c.spawns, joins=c.joins)
                 for name, c in sorted(self.tenants.items())
             }
+        if self.exchange.rounds:  # only EP dispatch surfaces grow it
+            out["exchange"] = self.exchange.summary()
         return out
 
     def to_json(self) -> str:
@@ -184,4 +227,5 @@ class SchedTelemetry(SchedCounters):
         self.splits = self.completions = self.errors = 0
         self.steal_victims = {}
         self.tenants = {}
+        self.exchange = ExchangeCounters()
         self.latencies = deque(maxlen=LATENCY_WINDOW)  # atomic rebind

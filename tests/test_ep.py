@@ -1,0 +1,241 @@
+"""Expert-parallel dispatch (repro.ep): exchange-plan properties +
+EP ↔ single-host numerical equivalence.
+
+Three layers:
+
+* **Plan properties** — deterministic units plus a hypothesis sweep
+  asserting the `ExchangePlan` send/recv matrix is *conservative*: for
+  every source shard, planned sends + drops == routed pair counts, no
+  lane exceeds capacity, and drops appear only when a source's total
+  routed pairs exceed its total lane capacity.
+* **Capacity-provider overflow** — the `residual` clamp never goes
+  negative and `overflow` exposes the clamped excess (the EP planner
+  consumes both sides of this split).
+* **Device equivalence** — on a 2-shard ``expert`` mesh (subprocess, so
+  the host-device-count override never leaks), ``ep_dispatch_combine``
+  matches the single-host ``dispatch_combine`` output up to token order,
+  the ``ppermute`` ring matches the fused ``all_to_all``, and telemetry
+  shows exactly one join for the round.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.ep.plan import lane_capacity, plan_exchange
+from repro.sched import ExpertCapacityProvider
+
+# ---------------------------------------------------------------------------
+# ExchangePlan arithmetic (host-side, no devices)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_exchange_reassigns_before_dropping():
+    # shard 0 overflows its own lane; shards 2/3 have idle rows
+    p = plan_exchange([[10, 2, 0, 0], [3, 3, 3, 3],
+                       [0, 0, 20, 0], [4, 4, 4, 4]], lane_capacity=8)
+    for i in range(4):
+        assert sum(p.send[i]) + p.dropped[i] == sum(p.counts[i])
+        assert all(c <= 8 for c in p.send[i])
+    # 10+2 pairs fit in 4 lanes of 8 — reassigned, nothing dropped
+    assert p.dropped == (0, 0, 0, 0)
+    assert p.reassigned[0] == 2 and p.reassigned[2] == 12
+    # recv is the transpose: what shard j finds in its incoming block
+    assert p.recv[0][2] == p.send[2][0]
+    assert p.sent_total == sum(map(sum, p.counts))
+
+
+def test_plan_exchange_drops_only_above_total_capacity():
+    # 40 routed pairs, 4 lanes × 8 rows = 32 total: 8 must drop, and the
+    # plan fills every lane to capacity before giving up
+    p = plan_exchange([[40, 0, 0, 0]] + [[0, 0, 0, 0]] * 3,
+                      lane_capacity=8)
+    assert p.send[0] == (8, 8, 8, 8)
+    assert p.dropped[0] == 8
+    assert p.reassigned[0] == 24
+    assert p.summary()["dropped"] == 8
+
+
+def test_plan_exchange_zero_capacity_drops_everything():
+    p = plan_exchange([[3, 1], [0, 2]], lane_capacity=0)
+    assert p.send == ((0, 0), (0, 0))
+    assert p.dropped == (4, 2)
+
+
+def test_lane_capacity_holds_balanced_load():
+    # S lanes jointly hold every locally routed pair at cf >= 1.0
+    for Tl, K, S in ((128, 2, 2), (64, 2, 4), (96, 3, 4)):
+        assert lane_capacity(Tl, K, S, 1.0) * S >= Tl * K
+
+
+def _check_conservation(counts, cap):
+    p = plan_exchange(counts, cap)
+    S = len(counts)
+    for i in range(S):
+        routed = sum(counts[i])
+        assert sum(p.send[i]) + p.dropped[i] == routed
+        assert all(0 <= c <= cap for c in p.send[i])
+        assert 0 <= p.reassigned[i] <= routed
+        # drops only when the row exceeds its total lane capacity, and
+        # then exactly by the excess (the plan never strands idle rows)
+        assert p.dropped[i] == max(0, routed - S * cap)
+    # recv is a permutation of the same pairs (column transpose)
+    assert sum(map(sum, p.recv)) == sum(map(sum, p.send))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=6).flatmap(
+            lambda s: st.lists(
+                st.lists(st.integers(min_value=0, max_value=64),
+                         min_size=s, max_size=s),
+                min_size=s, max_size=s)),
+        st.integers(min_value=0, max_value=48),
+    )
+    def test_plan_exchange_conservation_property(counts, cap):
+        _check_conservation(counts, cap)
+except ImportError:  # pragma: no cover - hypothesis is a dev extra
+    def test_plan_exchange_conservation_property():
+        for counts, cap in (
+            ([[64, 0], [32, 32]], 16),
+            ([[5, 7, 9], [0, 0, 0], [21, 1, 2]], 8),
+            ([[1]], 0),
+        ):
+            _check_conservation(counts, cap)
+
+
+# ---------------------------------------------------------------------------
+# ExpertCapacityProvider overflow handling (the path the planner consumes)
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_residual_clamps_and_overflow_exposes_drop():
+    import jax.numpy as jnp
+
+    cap = ExpertCapacityProvider(n_experts=4, slots_per_expert=8)
+    # per-expert loads above capacity — and a total (45) above total()
+    load = jnp.asarray([20, 8, 12, 5])
+    assert int(jnp.sum(load)) > cap.total()
+    resid = np.asarray(cap.residual(load))
+    over = np.asarray(cap.overflow(load))
+    np.testing.assert_array_equal(resid, [0, 0, 0, 3])   # never negative
+    np.testing.assert_array_equal(over, [12, 0, 4, 0])   # clamped excess
+    # conservation: admitted + dropped == load, even above total capacity
+    admitted = np.minimum(np.asarray(load), cap.slots_per_expert)
+    np.testing.assert_array_equal(admitted + over, np.asarray(load))
+
+
+# ---------------------------------------------------------------------------
+# EP ↔ single-host equivalence (2-shard expert mesh, subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json
+    import jax, jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.distributed.sharding import mesh_context
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import moe as MOE
+    from repro.ep.dispatch import ep_dispatch_combine, ep_round
+    from repro.sched import SchedTelemetry
+
+    # ample capacity: no admission differences, outputs must agree
+    cfg = dataclasses.replace(get_config("mixtral-8x7b", smoke=True),
+                              moe_capacity_factor=8.0,
+                              expert_parallel=True)
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+
+    cfg_host = dataclasses.replace(cfg, expert_parallel=False)
+    y_ref = MOE.moe_apply(p, cfg_host, x)
+
+    results = {}
+    mesh = make_test_mesh(data=1, model=1, expert=2)
+    with mesh_context(mesh):
+        y_ep, st = MOE.moe_apply(p, cfg, x, return_stats=True)
+        y_pp = ep_dispatch_combine(p, cfg, x, mesh=mesh, impl="ppermute")
+        tel = SchedTelemetry()
+        y_rd, st_rd = ep_round(p, cfg, x, mesh=mesh, telemetry=tel)
+    results["max_diff"] = float(jnp.max(jnp.abs(y_ep - y_ref)))
+    # sorted-token comparison: order-insensitive equivalence oracle
+    results["sorted_diff"] = float(np.max(np.abs(
+        np.sort(np.asarray(y_ep), axis=0) -
+        np.sort(np.asarray(y_ref), axis=0))))
+    results["ppermute_diff"] = float(jnp.max(jnp.abs(y_pp - y_ep)))
+    results["stats"] = {k: float(v) for k, v in st.items()}
+    results["round"] = {k: float(v) for k, v in st_rd.items()}
+    results["telemetry"] = dict(joins=tel.joins, spawns=tel.spawns,
+                                exchange=tel.exchange.summary())
+
+    # 4-shard hot-expert pressure: reassignment, conservation
+    cfg_hot = dataclasses.replace(cfg, moe_capacity_factor=1.0)
+    p_hot = dict(p)
+    p_hot["router"] = p["router"].at[:, 0].add(4.0)
+    mesh4 = make_test_mesh(data=1, model=1, expert=4)
+    with mesh_context(mesh4):
+        xh = jax.random.normal(jax.random.PRNGKey(3), (128, cfg.d_model))
+        _, sth = MOE.moe_apply(p_hot, cfg_hot, xh, return_stats=True)
+    results["hot"] = {k: float(v) for k, v in sth.items()}
+    print("RESULT " + json.dumps(results))
+""")
+
+
+@pytest.fixture(scope="module")
+def ep_results():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=1200,
+        cwd=os.path.dirname(os.path.dirname(__file__)) or ".")
+    assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-3000:]
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError("no RESULT line:\n" + out.stdout)
+
+
+def test_ep_matches_single_host_dispatch(ep_results):
+    # token-order-preserving equality AND the order-insensitive oracle
+    assert ep_results["max_diff"] < 1e-5
+    assert ep_results["sorted_diff"] < 1e-5
+
+
+def test_ep_ppermute_matches_all_to_all(ep_results):
+    assert ep_results["ppermute_diff"] < 1e-6
+
+
+def test_ep_single_join_per_round(ep_results):
+    st = ep_results["stats"]
+    assert st["joins"] == 1 and st["rounds"] == 1
+    tel = ep_results["telemetry"]
+    assert tel["joins"] == 1
+    assert tel["exchange"]["rounds"] == 1
+    assert tel["exchange"]["sent"] == tel["exchange"]["received"]
+    assert tel["spawns"] == ep_results["round"]["spawns"]
+
+
+def test_ep_stats_conservation(ep_results):
+    # ample capacity: every (token, choice) pair admitted, none dropped
+    st = ep_results["stats"]
+    assert st["dropped_frac"] == 0.0
+    assert st["sent"] == st["received"] == st["spawns"] == 64 * 2
+
+
+def test_ep_hot_router_reassigns_under_pressure(ep_results):
+    hot = ep_results["hot"]
+    assert hot["reassigned"] > 0          # DLBC moved overflow pre-collective
+    assert hot["sent"] == hot["received"]
+    # spawns + dropped == T*K pairs (the shared vocabulary invariant)
+    assert hot["spawns"] + hot["dropped"] == 128 * 2
