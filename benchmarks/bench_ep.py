@@ -44,7 +44,10 @@ INNER = textwrap.dedent("""
     from repro.launch.mesh import make_test_mesh
     from repro.models import moe as MOE
     from repro.ep.dispatch import ep_round
+    from repro.obs import trace as obs
     from repro.sched import SchedTelemetry
+
+    obs.enable()  # traced run: the ep.trace.json artifact for CI replay
 
     T, CF = 256, 1.0
     cfg0 = dataclasses.replace(get_config("mixtral-8x7b", smoke=True),
@@ -77,6 +80,7 @@ INNER = textwrap.dedent("""
         return (time.perf_counter() - t0) / iters * 1e3
 
     records = []
+    ep_tels = []
     mesh = make_test_mesh(data=1, model=1, expert=2)
     for router, pp, xx in (("balanced", p_bal, xb), ("hot", p_hot, xh)):
         # --- data-parallel baseline (single-host two-round dispatch) ---
@@ -91,6 +95,7 @@ INNER = textwrap.dedent("""
         # --- expert-parallel all-to-all over 2 shards ------------------
         ecfg = dataclasses.replace(cfg, expert_parallel=True)
         tel = SchedTelemetry()
+        ep_tels.append(tel)
         with mesh_context(mesh):
             y, st = ep_round(pp, ecfg, xx, mesh=mesh, telemetry=tel)
             ms = timed(lambda: MOE.moe_apply(pp, ecfg, xx))
@@ -102,6 +107,19 @@ INNER = textwrap.dedent("""
             received=st["received"], reassigned=st["reassigned"],
             dropped=st["dropped"], n_shards=st["n_shards"],
             lane_capacity=st["lane_capacity"]))
+
+    # One trace artifact across both EP rounds: the per-round telemetry
+    # objects are summed into the summary the exporter cross-checks
+    # (write_trace raises -> non-zero exit if the counts disagree).
+    from benchmarks.common import write_trace
+    write_trace("ep", {
+        "spawns": sum(t.spawns for t in ep_tels),
+        "joins": sum(t.joins for t in ep_tels),
+        "exchange": {
+            "posted": sum(t.exchange.posted for t in ep_tels),
+            "completed": sum(t.exchange.completed for t in ep_tels),
+        },
+    })
     print("RESULT " + json.dumps(records))
 """)
 

@@ -30,9 +30,10 @@ from __future__ import annotations
 
 import time
 
+from repro.obs import trace as obs
 from repro.sched import DLBC, GrainController, WorkStealingExecutor
 
-from .common import report
+from .common import report, write_trace
 
 N_ITEMS = 64
 WORKERS = 4
@@ -43,6 +44,11 @@ ARMS = ("grain1", "coarse", "adaptive")
 UNIFORM_SPEEDUP_MIN = 3.0
 SKEW_FRACTION_MIN = 0.9
 SPAWNS_PER_LOOP_MAX = N_ITEMS // 4  # "~n_ranges, not ~n_items"
+#: tracing overhead budget on the uniform grain loop (wall time there IS
+#: scheduling overhead — the harshest denominator for the tracer)
+TRACE_OVERHEAD_MAX = 0.05
+OVERHEAD_ITEMS = 512   # larger loop: µs-scale emit cost needs a stable base
+OVERHEAD_REPS = 9
 
 
 def _cpu_item(x):
@@ -95,6 +101,39 @@ def _sweep() -> list:
             for dist in ("uniform", "skewed") for arm in ARMS]
 
 
+def _overhead_check() -> dict:
+    """Tracer cost on the uniform loop: best-of wall time with tracing
+    off vs on, same executor and adaptive policy.  Events are only
+    emitted at scheduling edges (per range, not per item), so the
+    enabled run must stay within ``TRACE_OVERHEAD_MAX`` of baseline."""
+    items = list(range(OVERHEAD_ITEMS))
+    ex = WorkStealingExecutor(n_workers=WORKERS)
+    policy = DLBC()
+
+    def one():
+        t0 = time.perf_counter()
+        ex.run_loop(items, _cpu_item, policy=policy)
+        return time.perf_counter() - t0
+
+    try:
+        one()  # warm the pool/ranges before either arm is timed
+        base = traced = float("inf")
+        # interleaved off/on pairs: host drift hits both arms equally
+        for _ in range(OVERHEAD_REPS):
+            obs.disable()
+            base = min(base, one())
+            obs.enable()
+            traced = min(traced, one())
+    finally:
+        obs.disable()
+        obs.clear()
+        ex.shutdown()
+    frac = traced / base - 1.0
+    return dict(base_wall_s=base, traced_wall_s=traced,
+                trace_overhead_frac=round(frac, 4),
+                trace_overhead_ok=frac <= TRACE_OVERHEAD_MAX)
+
+
 def _gates(records: list) -> dict:
     by = {(r["dist"], r["arm"]): r for r in records}
     uniform_speedup = (by["uniform", "adaptive"]["items_per_s"]
@@ -111,6 +150,10 @@ def _gates(records: list) -> dict:
             <= SPAWNS_PER_LOOP_MAX
             < by["uniform", "grain1"]["spawns_per_loop"]),
         skew_steals_ok=by["skewed", "adaptive"]["steals"] > 0,
+        # quiescence: every spawned task reported completion (errors are
+        # a subset of completions — the containment contract)
+        quiescence_ok=all(r["completions"] == r["spawns"]
+                          for r in records),
     )
 
 
@@ -122,6 +165,7 @@ def run(attempts: int = 2):
             r["attempt"] = attempt
         history.extend(records)
         gates = _gates(records)
+        gates.update(_overhead_check())
         gates["attempt"] = attempt
         if all(v for k, v in gates.items() if k.endswith("_ok")
                or k == "spawns_collapsed"):
@@ -143,6 +187,18 @@ def run(attempts: int = 2):
         # every attempt's measurements are preserved in the artifact;
         # the gates record names the attempt that was judged
         "grain", history + [dict(dist="-", arm="gates", **gates)])
+    # Traced pass on the richest arm (skewed + adaptive: steals AND
+    # splits) — the artifact the CI gate replays through the exporter.
+    obs.clear()
+    obs.enable()
+    try:
+        traced = _run_arm("adaptive", "skewed")
+        write_trace("grain", {k: traced[k] for k in
+                              ("spawns", "joins", "steals", "splits",
+                               "completions", "errors")})
+    finally:
+        obs.disable()
+
     print(f"gates: {gates}")
     assert gates["uniform_speedup_ok"], (
         f"adaptive grain is only {gates['uniform_speedup']:.2f}x grain=1 "
@@ -153,6 +209,10 @@ def run(attempts: int = 2):
     assert gates["spawns_collapsed"], "spawns did not collapse to ~n_ranges"
     assert gates["skew_steals_ok"], (
         "no steals on the skewed workload — splitting killed rebalancing")
+    assert gates["quiescence_ok"], "completions != spawns at quiescence"
+    assert gates["trace_overhead_ok"], (
+        f"tracing overhead {gates['trace_overhead_frac']:.1%} on the "
+        f"uniform grain loop (budget {TRACE_OVERHEAD_MAX:.0%})")
     return out
 
 

@@ -13,9 +13,10 @@ from __future__ import annotations
 
 import time
 
+from repro.obs import trace as obs
 from repro.sched import ThreadExecutor, WorkStealingExecutor
 
-from .common import report
+from .common import dist_stats, report, write_trace
 
 
 def _sleep_work(ms: float):
@@ -61,7 +62,9 @@ def run(n_items: int = 64, workers: int = 4, repeats: int = 3):
                          s["steals"], f"{s['p50_ms']:.2f}",
                          f"{s['p99_ms']:.2f}"])
             records.append(dict(dist=dist, policy=policy, wall_s=dt,
-                                items_per_s=thr, **s))
+                                items_per_s=thr,
+                                wall_dist=dist_stats([r[0] for r in runs]),
+                                **s))
 
     # DCAFE: many loops, one escaped join (host-side finish elimination)
     ex = ThreadExecutor(n_workers=workers)
@@ -81,6 +84,18 @@ def run(n_items: int = 64, workers: int = 4, repeats: int = 3):
                             items_per_s=n_items / dt, **s))
     finally:
         ex.shutdown()
+
+    # Traced pass: one skewed stealing run with the obs tracer on, so the
+    # artifact CI replays through the exporter covers the richest event
+    # mix (spawn/steal/split/park/join) — conservation checked inline.
+    obs.clear()
+    obs.enable()
+    try:
+        _, tel = _run_once("dlbc-steal", make_costs(n_items, "skewed"),
+                           workers)
+        write_trace("sched", tel.summary())
+    finally:
+        obs.disable()
 
     out = report(
         f"Host-pool policy comparison ({n_items} items, {workers} workers, "

@@ -6,7 +6,10 @@ import json
 import time
 from pathlib import Path
 
+from repro.sched.telemetry import LogHistogram
+
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+TRACE_DIR = RESULTS_DIR / "trace"
 
 
 def save(name: str, payload):
@@ -39,8 +42,45 @@ def report(title, rows, headers, name, records):
 
 class Timer:
     def __enter__(self):
-        self.t0 = time.time()
+        self.t0 = time.perf_counter()  # monotonic: timers measure deltas
         return self
 
     def __exit__(self, *a):
-        self.dt = time.time() - self.t0
+        self.dt = time.perf_counter() - self.t0
+
+
+def dist_stats(samples_s):
+    """Distribution summary of repeated wall times through the shared
+    log-bucketed histogram: p50/p99/max plus the p99/p50 tail ratio, so
+    benchmark records report tails with the same bucketing the runtime
+    telemetry uses (±1 bucket ≈ ×2 resolution, consistent overestimate).
+    """
+    hist = LogHistogram()
+    hist.extend(samples_s)
+    s = hist.summary()
+    return {"n": s["n"], "p50_ms": s["p50_ms"], "p99_ms": s["p99_ms"],
+            "max_ms": s["max_ms"], "tail_p99_p50": s["tail_p99_p50"]}
+
+
+def write_trace(name: str, telemetry_summary=None):
+    """Drain the obs rings into ``experiments/bench/trace/<name>.trace.json``
+    (Chrome trace-event JSON) with the run's telemetry summary embedded,
+    then cross-check trace-derived counts against it — the same check CI
+    replays on the uploaded artifact.  Returns (path, crosscheck dict)."""
+    from repro.obs import export as obs_export
+    from repro.obs import trace as obs_trace
+
+    TRACE_DIR.mkdir(parents=True, exist_ok=True)
+    path = TRACE_DIR / f"{name}.trace.json"
+    extra = {}
+    if telemetry_summary is not None:
+        extra["telemetry"] = telemetry_summary
+    doc = obs_export.write_chrome_trace(str(path), extra=extra)
+    check = (obs_export.crosscheck(doc, telemetry_summary)
+             if telemetry_summary is not None else {"ok": True})
+    obs_trace.clear()
+    print(f"[trace {path}] crosscheck ok={check['ok']}")
+    if not check["ok"]:
+        raise AssertionError(
+            f"trace/telemetry count mismatch: {check['mismatches']}")
+    return path, check

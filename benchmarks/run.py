@@ -51,13 +51,13 @@ ALL = {
 
 def main(argv=None):
     names = (argv or sys.argv[1:]) or list(ALL)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for name in names:
         print(f"\n{'=' * 72}\nBENCH {name}\n{'=' * 72}")
-        t = time.time()
+        t = time.perf_counter()
         ALL[name]()
-        print(f"[{name} done in {time.time() - t:.1f}s]")
-    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+        print(f"[{name} done in {time.perf_counter() - t:.1f}s]")
+    print(f"\nall benchmarks done in {time.perf_counter() - t0:.1f}s")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from ..obs import trace as obs
 from ..sched import (
     FinishScope, SchedTelemetry, ThreadExecutor, WorkStealingExecutor,
     get_policy,
@@ -94,9 +95,11 @@ class CheckpointManager:
         bounded exposure should ``wait()`` shortly after (the trainer
         does so one step later, once the I/O has had a step to finish).
         """
-        snap = {}
-        for path, arr in _flatten_with_paths(tree):
-            snap[path] = np.asarray(arr)  # device→host copy now
+        with obs.trace_span("ckpt", "snapshot", {"step": step}
+                            if obs.enabled() else None):
+            snap = {}
+            for path, arr in _flatten_with_paths(tree):
+                snap[path] = np.asarray(arr)  # device→host copy now
         self.wait()
         self._scope = FinishScope(self.telemetry) \
             if self.policy.escape_join else None
@@ -167,7 +170,10 @@ class CheckpointManager:
         def write_shard(job):
             fname, arr = job
             try:
-                np.save(fname, arr)
+                with obs.trace_span("ckpt", "shard_write",
+                                    {"bytes": int(arr.nbytes)}
+                                    if obs.enabled() else None):
+                    np.save(fname, arr)
             except Exception as e:  # noqa: BLE001 — re-raised at publish
                 errors.append((str(fname), e))
 
@@ -181,13 +187,18 @@ class CheckpointManager:
                     f"checkpoint step {step}: {len(errors)} shard "
                     f"write(s) failed (first: {fname}: {err!r}); "
                     "leaving the un-COMMITted temp dir") from err
-            (tmp / f"manifest_{proc}.json").write_text(json.dumps(manifest))
-            (tmp / "COMMIT").write_text(str(time.time()))
-            # Atomic publish.
-            if final.exists():
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            self._gc()
+            with obs.trace_span("ckpt", "publish", {"step": step}
+                                if obs.enabled() else None):
+                (tmp / f"manifest_{proc}.json").write_text(
+                    json.dumps(manifest))
+                # wall-clock commit timestamp on purpose (it is read by
+                # humans across restarts, not differenced)
+                (tmp / "COMMIT").write_text(str(time.time()))
+                # Atomic publish.
+                if final.exists():
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                self._gc()
 
         return publish
 

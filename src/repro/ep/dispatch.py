@@ -45,6 +45,7 @@ from jax.sharding import PartitionSpec as P
 from ..kernels.moe_dispatch.ops import (
     combine_tokens, dispatch_tokens, expert_ffn,
 )
+from ..obs import trace as obs
 from ..models.moe import (
     _expert_load, _positions_in_expert, capacity, dlbc_reroute, route,
 )
@@ -228,17 +229,34 @@ def ep_round(p: dict, cfg, x, *, mesh,
     counts.  Returns ``(y, stats)`` with host-int stats.
     """
     telemetry = telemetry if telemetry is not None else SchedTelemetry()
-    with FinishScope(telemetry):
-        y, stats = ep_dispatch_combine(p, cfg, x, mesh=mesh,
-                                       use_kernel=use_kernel, impl=impl,
-                                       return_stats=True)
-        y = jax.block_until_ready(y)
-        stats = {k: (float(v) if k == "dropped_frac" else int(v))
-                 for k, v in stats.items()}
+    # obs round edges (cat="ep"): ``round_posted`` when the round's
+    # collectives are launched, ``round_completed`` when its single
+    # barrier lands — the same two edges ``ExchangeCounters.posted`` /
+    # ``completed`` count, so the trace↔telemetry cross-check covers
+    # them.  Today the round blocks before returning (posted ==
+    # completed at quiescence); the double-buffered overlap (ROADMAP)
+    # will separate the edges without touching this vocabulary.
+    # The in-jit legs (dispatch a2a → expert FFN → combine a2a) are one
+    # XLA computation and not separately host-visible — the host phases
+    # are launch (trace+compile+enqueue) and barrier (device work).
+    with obs.trace_span("ep", "round"):
+        with FinishScope(telemetry):
+            obs.instant("ep", "round_posted")
+            telemetry.record_exchange(posted=1)
+            with obs.trace_span("ep", "launch"):
+                y, stats = ep_dispatch_combine(p, cfg, x, mesh=mesh,
+                                               use_kernel=use_kernel,
+                                               impl=impl, return_stats=True)
+            with obs.trace_span("ep", "barrier"):
+                y = jax.block_until_ready(y)
+            stats = {k: (float(v) if k == "dropped_frac" else int(v))
+                     for k, v in stats.items()}
+    obs.instant("ep", "round_completed")
     with telemetry.lock:
         telemetry.spawns += stats["spawns"]
+    obs.instant("sched", "spawn", n=stats["spawns"])
     telemetry.record_exchange(
         sent=stats["sent"], received=stats["received"],
         reassigned=stats["reassigned"], dropped=stats["dropped"],
-        rounds=1)
+        completed=1)
     return y, stats

@@ -133,7 +133,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                reason=reason)
     if not ok:
         return rec
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: lower/compile are timed deltas
     mesh = mesh or make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     dp_shard = policy in ("afe", "afe_bucket")
@@ -179,9 +179,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             args = (pshapes, cshapes, bspecs)
 
         lowered = fn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()

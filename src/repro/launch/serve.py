@@ -102,7 +102,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--telemetry-json", default=None,
                     help="also dump the slot-scheduler telemetry here")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record an obs span trace of the run and write "
+                         "Chrome trace-event JSON here (Perfetto-loadable)")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from ..obs import trace as obs_trace
+        obs_trace.enable()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = MDL.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -130,6 +137,13 @@ def main(argv=None):
     if args.telemetry_json:
         with open(args.telemetry_json, "w") as f:
             json.dump({"serve_slots": telemetry}, f, indent=1)
+    if args.trace:
+        from ..obs import export as obs_export
+        doc = obs_export.write_chrome_trace(
+            args.trace, extra={"telemetry": telemetry})
+        check = obs_export.crosscheck(doc, telemetry)
+        print(f"[trace written to {args.trace}; "
+              f"crosscheck ok={check['ok']}]")
 
 
 if __name__ == "__main__":

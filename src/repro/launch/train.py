@@ -39,7 +39,14 @@ def main(argv=None):
     ap.add_argument("--failure-at", type=int, default=None)
     ap.add_argument("--telemetry-json", default=None,
                     help="also dump the per-surface sched telemetry here")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record an obs span trace of the run and write "
+                         "Chrome trace-event JSON here (Perfetto-loadable)")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from ..obs import trace as obs_trace
+        obs_trace.enable()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train",
@@ -66,6 +73,11 @@ def main(argv=None):
     if args.telemetry_json:
         with open(args.telemetry_json, "w") as f:
             json.dump(rep.sched, f, indent=1)
+    if args.trace:
+        from ..obs import export as obs_export
+        obs_export.write_chrome_trace(args.trace,
+                                      extra={"telemetry": rep.sched})
+        print(f"[trace written to {args.trace}]")
 
 
 if __name__ == "__main__":

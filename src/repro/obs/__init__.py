@@ -1,0 +1,32 @@
+"""repro.obs — low-overhead span tracing + distribution telemetry.
+
+Two halves:
+
+* :mod:`repro.obs.trace` — per-thread bounded ring buffers of
+  span/instant events (``perf_counter_ns``; no locks or allocation on
+  the hot path; a single module-flag read when disabled).  The
+  scheduling surfaces emit an instant wherever they bump a
+  ``SchedTelemetry`` counter and a span around worker busy time and
+  phase boundaries (serve step phases, EP round edges, trainer step
+  phases, checkpoint shard writes).
+* :mod:`repro.obs.export` — merge the rings into Chrome trace-event
+  JSON (Perfetto-loadable, one track per worker) plus metrics derived
+  *from the trace*: per-worker occupancy/idle, join-stall and steal
+  breakdowns, and the conservation cross-check that re-derives the
+  spawn/join/steal counts from events and compares them to
+  ``SchedTelemetry.summary()``.
+
+Enable per-process with ``REPRO_TRACE=/path/out.json`` (exports at
+exit), per-run with the launchers' ``--trace out.json``, or in code
+with :func:`repro.obs.enable` + :func:`repro.obs.write_chrome_trace`.
+See ``docs/obs.md``.
+"""
+
+from .trace import (  # noqa: F401
+    DEFAULT_CAPACITY, Ring, clear, complete_span, disable, enable,
+    enabled, instant, ring_stats, snapshot, trace_span,
+)
+from .export import (  # noqa: F401
+    chrome_trace, counts_from_chrome, crosscheck, derived_metrics,
+    exchange_counts_from_chrome, write_chrome_trace,
+)

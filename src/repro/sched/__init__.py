@@ -47,5 +47,6 @@ from .executors import (  # noqa: F401
     WorkStealingExecutor,
 )
 from .telemetry import (  # noqa: F401
-    ExchangeCounters, SchedCounters, SchedTelemetry, percentile,
+    ExchangeCounters, LogHistogram, SchedCounters, SchedTelemetry,
+    percentile,
 )

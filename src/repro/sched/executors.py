@@ -27,10 +27,19 @@ from collections import deque
 from itertools import count
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from ..obs import trace as obs
 from .capacity import PoolCapacity, SlotCapacity
 from .policy import GrainPlan, SchedPolicy, get_policy
 from .telemetry import SchedTelemetry
 from .tenancy import TenantRegistry, ensure_weighted
+
+# Tracing contract (repro.obs): an instant event is emitted at every
+# site that bumps a SchedTelemetry counter — same name, same integer
+# weight — so the exporter can re-derive spawns/joins/steals/splits/
+# completions/errors from the trace and CI can assert they agree
+# (docs/obs.md).  Worker busy time is spans with cat="worker"; stalls
+# (join_stall, park, steal latency) are cat="sched".  Every emit is a
+# single module-flag read when tracing is disabled.
 
 
 class RangeLatch:
@@ -113,12 +122,14 @@ class FinishScope:
         self._events.extend(events)
 
     def join(self):
-        for ev in self._events:
-            ev.wait()
+        with obs.trace_span("sched", "join_stall"):
+            for ev in self._events:
+                ev.wait()
         self._events.clear()
         if self.telemetry is not None:
             with self.telemetry.lock:
                 self.telemetry.joins += 1
+            obs.instant("sched", "join")
 
     def __enter__(self):
         return self
@@ -157,8 +168,11 @@ class ThreadExecutor:
         self.telemetry = telemetry or SchedTelemetry()
         self.capacity = PoolCapacity(self)
         self._threads = [
-            threading.Thread(target=self._worker, daemon=True)
-            for _ in range(n_workers)
+            # named threads: the trace exporter shows one track per
+            # worker, labelled by executor class and worker index
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"{type(self).__name__}-w{i}")
+            for i in range(n_workers)
         ]
         for t in self._threads:
             t.start()
@@ -174,7 +188,8 @@ class ThreadExecutor:
             with self._idle_lock:
                 self._idle -= 1
             try:
-                fn()
+                with obs.trace_span("worker", "task"):
+                    fn()
             except Exception:
                 # Contain task exceptions: the worker thread survives, the
                 # done event still fires, so joins (and FinishScope) never
@@ -182,17 +197,20 @@ class ThreadExecutor:
                 # silently kill the thread and shrink the pool forever.
                 with self.telemetry.lock:
                     self.telemetry.errors += 1
+                obs.instant("sched", "error")
             finally:
                 with self._idle_lock:
                     self._idle += 1
                 with self.telemetry.lock:
                     self.telemetry.completions += 1
+                obs.instant("sched", "complete")
                 done.set()
 
     def _submit(self, fn: Callable[[], None]) -> threading.Event:
         ev = threading.Event()
         with self.telemetry.lock:
             self.telemetry.spawns += 1
+        obs.instant("sched", "spawn")
         self._q.put((fn, ev))
         return ev
 
@@ -238,6 +256,7 @@ class ThreadExecutor:
                     except Exception:
                         with t.lock:
                             t.errors += 1
+                        obs.instant("sched", "error")
                     finally:
                         t.record_latency(time.perf_counter() - t0)
 
@@ -304,33 +323,37 @@ class ThreadExecutor:
                 # items propagate like a plain for loop (see docstring),
                 # so the per-item telemetry is batched outside the lock.
                 ca, cb = plan.caller
-                for j in range(ca, cb):
-                    t0 = time.perf_counter()
-                    fn(items[j])
-                    t.record_latency(time.perf_counter() - t0)
                 if cb > ca:
+                    with obs.trace_span("worker", "caller"):
+                        for j in range(ca, cb):
+                            t0 = time.perf_counter()
+                            fn(items[j])
+                            t.record_latency(time.perf_counter() - t0)
                     with t.lock:
                         t.parallel_items += cb - ca
                 if policy.escape_join and scope is not None:
                     scope.add(events)  # DCAFE: join escapes to the scope
                 else:
-                    self._join(events)
+                    with obs.trace_span("sched", "join_stall"):
+                        self._join(events)
                     with t.lock:
                         t.joins += 1
+                    obs.instant("sched", "join")
                 return
             # serial block with periodic capacity re-probe (cadence counts
             # items processed in THIS block, not the absolute index)
             resumed = False
             every = decision.recheck_every
             done_in_block = 0
-            while i < n:
-                run_item(i, serial=True)
-                i += 1
-                done_in_block += 1
-                if (every > 0 and (done_in_block % every == 0)
-                        and self.capacity.idle() > 0 and (n - i) >= 2):
-                    resumed = True
-                    break
+            with obs.trace_span("worker", "serial"):
+                while i < n:
+                    run_item(i, serial=True)
+                    i += 1
+                    done_in_block += 1
+                    if (every > 0 and (done_in_block % every == 0)
+                            and self.capacity.idle() > 0 and (n - i) >= 2):
+                        resumed = True
+                        break
             if not resumed:
                 return
 
@@ -420,6 +443,7 @@ class WorkStealingExecutor(ThreadExecutor):
         latch = RangeLatch(1)
         with self.telemetry.lock:
             self.telemetry.spawns += 1
+        obs.instant("sched", "spawn")
         self._place(RangeTask(None, fn, 0, 1, latch))
         return latch
 
@@ -440,6 +464,7 @@ class WorkStealingExecutor(ThreadExecutor):
                                    grain.split_min))
         with self.telemetry.lock:
             self.telemetry.spawns += len(tasks)
+        obs.instant("sched", "spawn", n=len(tasks))
         owners = set()
         for task in tasks:
             v = next(self._rr) % self.n_workers
@@ -505,20 +530,23 @@ class WorkStealingExecutor(ThreadExecutor):
         lock, dq = self._locks[w], self._deques[w]
         ran = 0
         try:
-            while True:
-                with lock:
-                    if task.lo >= task.hi:
-                        dq.popleft()  # ours: helpers skip active tasks'
-                        return        # last items, thieves never pop front
-                    j = task.lo
-                    task.lo = j + 1
-                self._run_item(task, j)
-                ran += 1
+            with obs.trace_span("worker", "drain"):
+                while True:
+                    with lock:
+                        if task.lo >= task.hi:
+                            dq.popleft()  # ours: helpers skip active
+                            return        # tasks' last items, thieves
+                            #               never pop front
+                        j = task.lo
+                        task.lo = j + 1
+                    self._run_item(task, j)
+                    ran += 1
         finally:
             # completions before the latch: a joiner woken by the final
             # discharge must already observe spawns == completions
             with self.telemetry.lock:
                 self.telemetry.completions += 1
+            obs.instant("sched", "complete")
             task.latch.discharge(ran)
 
     def _run_item(self, task: RangeTask, j: int):
@@ -532,6 +560,7 @@ class WorkStealingExecutor(ThreadExecutor):
             # still fires
             with t.lock:
                 t.errors += 1
+            obs.instant("sched", "error")
         finally:
             t.record_latency(time.perf_counter() - t0)
 
@@ -610,6 +639,7 @@ class WorkStealingExecutor(ThreadExecutor):
             if removed:
                 with self.telemetry.lock:
                     self.telemetry.completions += 1
+                obs.instant("sched", "complete")
             best.latch.discharge(take)
             return True
         return False
@@ -622,6 +652,9 @@ class WorkStealingExecutor(ThreadExecutor):
         our own deque, where it is immediately drainable — and itself
         stealable, so splitting recurses."""
         n = self.n_workers
+        # clock read only when tracing: steal latency = scan start →
+        # loot landed; failed scans (idle spinning) emit nothing
+        t0 = obs.perf_counter_ns() if obs.enabled() else 0
         start = rng.randrange(n)
         for d in range(n):
             v = (start + d) % n
@@ -640,6 +673,12 @@ class WorkStealingExecutor(ThreadExecutor):
                 if split:
                     t.splits += 1
                     t.spawns += 1  # a split mints a new task
+            if obs.enabled():
+                obs.complete_span("sched", "steal", t0, {"victim": v})
+                obs.instant("sched", "steal", args={"victim": v})
+                if split:
+                    obs.instant("sched", "split")
+                    obs.instant("sched", "spawn")  # the minted task
             return True
         return False
 
@@ -707,7 +746,8 @@ class WorkStealingExecutor(ThreadExecutor):
             with self._park_lock:
                 self._parked.discard(w)
             return
-        ev.wait(timeout=_PARK_TIMEOUT)
+        with obs.trace_span("sched", "park"):
+            ev.wait(timeout=_PARK_TIMEOUT)
         with self._park_lock:
             self._parked.discard(w)
 
@@ -763,6 +803,9 @@ class SlotExecutor:
         placements = [(idle[j], queue.pop(0)) for j in range(k)]
         with self.telemetry.lock:
             self.telemetry.spawns += len(placements)
+        if placements:
+            obs.instant("sched", "spawn", n=len(placements))
+            obs.instant("serve", "admit", n=len(placements))
         return placements
 
     def weighted_policy(self):
@@ -791,6 +834,9 @@ class SlotExecutor:
             placements.append((slot, req))
         with self.telemetry.lock:
             self.telemetry.spawns += len(placements)
+        if placements:
+            obs.instant("sched", "spawn", n=len(placements))
+            obs.instant("serve", "admit", n=len(placements))
         return placements
 
     def tenant_busy_slots(self) -> Dict[str, int]:
@@ -809,6 +855,7 @@ class SlotExecutor:
         that tenant's counters too."""
         with self.telemetry.lock:
             self.telemetry.joins += 1
+        obs.instant("sched", "join")
         if slot is not None:
             name = self.slot_tenant[slot]
             if name is not None:

@@ -1,11 +1,18 @@
 """Fig. 10-style scheduling telemetry: spawn/join counters plus latency
-distributions (p50/p99), JSON-emittable for the benchmarks.
+distributions, JSON-emittable for the benchmarks.
 
 ``SchedCounters`` is the shared counter core — the simulator's Fig. 10
 counters (:class:`repro.core.runtime.Counters`) subclass it, so the IR
 simulator, the host pools, and the serving batcher all report through
 one counter vocabulary: *spawns* (``async`` analogue) and *joins*
 (``finish`` analogue).
+
+Distributions are reported two ways: point percentiles (p50/p90/p99,
+back-compat) and a log-bucketed :class:`LogHistogram` with a tail
+ratio (p99/p50) — most perf papers never report variance at all (see
+ROADMAP, oracle-first harness), so every gated surface carries the
+full shape, not just a median.  The histogram is built at ``summary()``
+time from the bounded sample window: nothing new on the record path.
 """
 
 from __future__ import annotations
@@ -16,7 +23,7 @@ import threading
 from collections import deque
 from dataclasses import dataclass, field
 from itertools import islice
-from typing import Deque, Dict, Iterable, List
+from typing import Deque, Dict, Iterable, List, Optional
 
 #: Sliding window for latency samples: long-lived pools (the global data
 #: pool runs for the whole training job) must not grow memory per item.
@@ -37,6 +44,104 @@ def percentile(data: Iterable[float], p: float) -> float:
     return s[f] + (s[c] - s[f]) * (k - f)
 
 
+#: LogHistogram bucket geometry: bucket ``k`` holds samples in
+#: ``(HIST_BASE_S * 2**(k-1), HIST_BASE_S * 2**k]`` seconds — 1 µs
+#: resolution at the bottom, ~2.6 hours at the top (64 buckets).
+HIST_BASE_S = 1e-6
+HIST_BUCKETS = 64
+
+
+class LogHistogram:
+    """Log2-bucketed latency histogram: O(1) add, mergeable across
+    repeats, percentile estimates within one bucket (≤ 2×) of exact.
+
+    Point percentiles from a bounded sample window stay the precise
+    numbers; the histogram is what survives aggregation — bucket counts
+    from every repeat/worker merge exactly, where percentiles of
+    percentiles are meaningless.
+    """
+
+    __slots__ = ("counts", "n", "total", "min", "max")
+
+    def __init__(self):
+        self.counts = [0] * HIST_BUCKETS
+        self.n = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = 0.0
+
+    @staticmethod
+    def bucket_of(seconds: float) -> int:
+        if seconds <= HIST_BASE_S:
+            return 0
+        return min(HIST_BUCKETS - 1,
+                   max(0, math.ceil(math.log2(seconds / HIST_BASE_S))))
+
+    @staticmethod
+    def bucket_edge_s(k: int) -> float:
+        """Upper edge of bucket ``k`` in seconds."""
+        return HIST_BASE_S * (2.0 ** k)
+
+    def add(self, seconds: float):
+        self.counts[self.bucket_of(seconds)] += 1
+        self.n += 1
+        self.total += seconds
+        if seconds < self.min:
+            self.min = seconds
+        if seconds > self.max:
+            self.max = seconds
+
+    def extend(self, samples: Iterable[float]):
+        for s in samples:
+            self.add(s)
+        return self
+
+    def merge(self, other: "LogHistogram") -> "LogHistogram":
+        for k, c in enumerate(other.counts):
+            self.counts[k] += c
+        self.n += other.n
+        self.total += other.total
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
+    def percentile(self, p: float) -> float:
+        """Upper bucket edge at percentile ``p`` (a ≤2× overestimate —
+        consistent, so ratios of histogram percentiles are meaningful)."""
+        if self.n == 0:
+            return 0.0
+        rank = (p / 100.0) * self.n
+        seen = 0
+        for k, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank and c:
+                return min(self.bucket_edge_s(k), self.max)
+        return self.max
+
+    def tail_ratio(self, hi: float = 99.0, lo: float = 50.0) -> float:
+        """Distribution-shape gate: histogram p``hi`` / p``lo`` (1.0 when
+        empty or degenerate).  Bucket-edge ratios quantise to powers of
+        two, which is exactly the robustness a CI gate wants."""
+        denom = self.percentile(lo)
+        return self.percentile(hi) / denom if denom > 0 else 1.0
+
+    def summary(self) -> Dict:
+        """Nonzero buckets keyed by upper edge in µs, plus the moments —
+        the JSON shape the benchmark artifacts carry."""
+        return dict(
+            n=self.n,
+            mean_ms=round((self.total / self.n) * 1e3, 4) if self.n else 0.0,
+            min_ms=round(self.min * 1e3, 4) if self.n else 0.0,
+            max_ms=round(self.max * 1e3, 4),
+            p50_ms=round(self.percentile(50) * 1e3, 4),
+            p90_ms=round(self.percentile(90) * 1e3, 4),
+            p99_ms=round(self.percentile(99) * 1e3, 4),
+            tail_p99_p50=round(self.tail_ratio(), 3),
+            buckets_us={str(int(self.bucket_edge_s(k) * 1e6)): c
+                        for k, c in enumerate(self.counts) if c},
+        )
+
+
 @dataclass
 class SchedCounters:
     """The Fig. 10 dynamic counts, substrate-neutral."""
@@ -54,19 +159,37 @@ class ExchangeCounters:
     how many (token, choice) pairs crossed the exchange, how many the
     DLBC plan *reassigned* to an idle expert shard before the collective
     (instead of dropping per-shard), and how many were dropped anyway.
-    ``rounds`` counts dispatch rounds; the AFE invariant gated in CI is
-    ``joins == rounds`` on the owning telemetry — ONE FinishScope join
-    per round, not one per expert or per shard."""
+
+    Rounds are counted at both edges: ``posted`` when a round's
+    collectives are launched, ``completed`` when its single barrier
+    lands.  Today every round blocks before the next, so
+    ``posted == completed`` at quiescence — the double-buffered overlap
+    (ROADMAP) will hold ``posted - completed`` in-flight rounds, and the
+    obs spans for EP rounds emit both edges already.  The AFE invariant
+    gated in CI is ``joins == completed`` on the owning telemetry — ONE
+    FinishScope join per round, not one per expert or per shard."""
 
     sent: int = 0         # (token, choice) pairs sent into the all-to-all
     received: int = 0     # pairs received across all shards (== sent)
     reassigned: int = 0   # overflow pairs re-planned to an idle shard
     dropped: int = 0      # pairs no shard had capacity for
-    rounds: int = 0       # dispatch rounds (each = one escaped join)
+    posted: int = 0       # rounds whose collectives were launched
+    completed: int = 0    # rounds whose barrier landed (each = one join)
+
+    @property
+    def rounds(self) -> int:
+        """Back-compat: completed rounds (the pre-split meaning — every
+        round used to be counted only once its barrier landed)."""
+        return self.completed
+
+    @property
+    def in_flight(self) -> int:
+        return self.posted - self.completed
 
     def summary(self) -> Dict[str, int]:
         return dict(sent=self.sent, received=self.received,
                     reassigned=self.reassigned, dropped=self.dropped,
+                    posted=self.posted, completed=self.completed,
                     rounds=self.rounds)
 
 
@@ -143,18 +266,27 @@ class SchedTelemetry(SchedCounters):
 
     def record_exchange(self, *, sent: int = 0, received: int = 0,
                         reassigned: int = 0, dropped: int = 0,
-                        rounds: int = 1):
-        """Fold one EP dispatch round's exchange counts in.  The caller
-        is responsible for the matching join (``repro.ep.dispatch`` runs
-        each round under a ``FinishScope``, so ``joins`` advances by
-        exactly one per round — the AFE invariant CI gates)."""
+                        posted: int = 0, completed: int = 0,
+                        rounds: Optional[int] = None):
+        """Fold EP exchange counts in.  ``posted``/``completed`` are the
+        round edges (a blocking round bumps both at once; the overlap
+        path will bump ``posted`` at launch and ``completed`` at the
+        barrier).  ``rounds=n`` is the legacy spelling of
+        ``posted=n, completed=n``.  The caller is responsible for the
+        matching join (``repro.ep.dispatch`` runs each round under a
+        ``FinishScope``, so ``joins`` advances by exactly one per
+        completed round — the AFE invariant CI gates)."""
+        if rounds is not None:
+            posted += int(rounds)
+            completed += int(rounds)
         with self.lock:
             ex = self.exchange
             ex.sent += int(sent)
             ex.received += int(received)
             ex.reassigned += int(reassigned)
             ex.dropped += int(dropped)
-            ex.rounds += int(rounds)
+            ex.posted += int(posted)
+            ex.completed += int(completed)
 
     def record_latency(self, seconds: float):
         self.latencies.append(seconds)  # GIL-atomic, no lock on the hot path
@@ -190,8 +322,14 @@ class SchedTelemetry(SchedCounters):
     def p99(self) -> float:
         return percentile(self._lat_snapshot(), 99)
 
+    def latency_histogram(self) -> LogHistogram:
+        """Log-bucketed histogram of the current latency window (built
+        here, at read time — the record path stays a deque append)."""
+        return LogHistogram().extend(self._lat_snapshot())
+
     def summary(self) -> Dict:
         """Flat dict for benchmark tables / JSON artifacts."""
+        hist = self.latency_histogram()
         out = dict(
             spawns=self.spawns,
             joins=self.joins,
@@ -200,9 +338,16 @@ class SchedTelemetry(SchedCounters):
             parallel_items=self.parallel_items,
             steals=self.steals,
             splits=self.splits,
+            # quiescence invariant (gated from bench artifacts):
+            # completions == spawns once every join fired — a raising
+            # task still completes (containment), so errors is a subset
+            # of completions, not a complement
+            completions=self.completions,
+            errors=self.errors,
             n_latencies=len(self.latencies),
             p50_ms=round(self.p50() * 1e3, 3),
             p99_ms=round(self.p99() * 1e3, 3),
+            latency_hist=hist.summary(),
         )
         if self.steal_victims:  # only the work-stealing executor grows it
             out["steal_victims"] = {
@@ -213,7 +358,8 @@ class SchedTelemetry(SchedCounters):
                 name: dict(spawns=c.spawns, joins=c.joins)
                 for name, c in sorted(self.tenants.items())
             }
-        if self.exchange.rounds:  # only EP dispatch surfaces grow it
+        if self.exchange.posted or self.exchange.completed:
+            # only EP dispatch surfaces grow it
             out["exchange"] = self.exchange.summary()
         return out
 

@@ -56,6 +56,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import model as MDL
+from ..obs import trace as obs
 from ..sched.executors import SlotExecutor
 from ..sched.policy import SchedPolicy
 from ..sched.telemetry import percentile
@@ -199,7 +200,12 @@ class ContinuousBatcher:
     # -- one decode step across all slots ------------------------------------
 
     def step(self, now: int):
-        self._admit(now)
+        # obs phases (cat="serve"): refill → decode → complete, so a
+        # trace shows where a decode step's wall time goes (admission
+        # arithmetic vs device step vs completion bookkeeping) and slot
+        # occupancy can be read against the admit/join instants.
+        with obs.trace_span("serve", "refill"):
+            self._admit(now)
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         self.stats.total_slot_steps += self.n_slots
         self.stats.busy_slot_steps += len(active)
@@ -213,34 +219,41 @@ class ContinuousBatcher:
             self.tenant_stats[name].busy_slot_steps += n_busy
         if not active:
             return
-        tokens = np.zeros((self.n_slots, 1), np.int32)
-        for i in active:
-            tokens[i, 0] = self.slot_req[i].tokens[-1] % self.cfg.vocab
-        # Per-slot cache positions: each slot writes/attends at ITS OWN
-        # index, so a freshly refilled slot (pos 0) is isolated from a
-        # neighbour deep into its sequence (refill-mid-decode safety).
-        cache_index = jnp.asarray(self.slot_pos, jnp.int32)
-        logits, self.cache = self._decode(
-            self.params, self.cache,
-            {"tokens": jnp.asarray(tokens), "cache_index": cache_index})
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i in active:
-            r = self.slot_req[i]
-            r.tokens.append(int(nxt[i]))
-            self.slot_pos[i] += 1
-            produced = len(r.tokens) - len(r.prompt)
-            if produced >= r.max_new or self.slot_pos[i] >= self.cache_len - 1:
-                r.done_step = now
-                # latencies live in ServeStats (the serving-facing record);
-                # telemetry only counts the join so Fig. 10 comparisons hold
-                lat = now - r.arrive_step
-                self.stats.latencies.append(lat)
-                ts = self.tenant_stats.get(r.tenant)
-                if ts is not None:
-                    ts.latencies.append(lat)
-                self.sched.complete(slot=i)
-                self.slot_req[i] = None
-                self.slot_pos[i] = 0
+        with obs.trace_span("serve", "decode",
+                            {"active": len(active)} if obs.enabled()
+                            else None):
+            tokens = np.zeros((self.n_slots, 1), np.int32)
+            for i in active:
+                tokens[i, 0] = self.slot_req[i].tokens[-1] % self.cfg.vocab
+            # Per-slot cache positions: each slot writes/attends at ITS
+            # OWN index, so a freshly refilled slot (pos 0) is isolated
+            # from a neighbour deep into its sequence (refill-mid-decode
+            # safety).
+            cache_index = jnp.asarray(self.slot_pos, jnp.int32)
+            logits, self.cache = self._decode(
+                self.params, self.cache,
+                {"tokens": jnp.asarray(tokens), "cache_index": cache_index})
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        with obs.trace_span("serve", "complete"):
+            for i in active:
+                r = self.slot_req[i]
+                r.tokens.append(int(nxt[i]))
+                self.slot_pos[i] += 1
+                produced = len(r.tokens) - len(r.prompt)
+                if produced >= r.max_new \
+                        or self.slot_pos[i] >= self.cache_len - 1:
+                    r.done_step = now
+                    # latencies live in ServeStats (the serving-facing
+                    # record); telemetry only counts the join so Fig. 10
+                    # comparisons hold
+                    lat = now - r.arrive_step
+                    self.stats.latencies.append(lat)
+                    ts = self.tenant_stats.get(r.tenant)
+                    if ts is not None:
+                        ts.latencies.append(lat)
+                    self.sched.complete(slot=i)
+                    self.slot_req[i] = None
+                    self.slot_pos[i] = 0
 
     # -- driving --------------------------------------------------------------
 

@@ -35,6 +35,7 @@ from ..ckpt.checkpoint import CheckpointManager
 from ..configs.base import ModelConfig, ShapeConfig
 from ..data.pipeline import DataConfig, SyntheticPipeline
 from ..models import model as MDL
+from ..obs import trace as obs
 from ..sched import SchedTelemetry
 from .optimizer import AdamWConfig, init_opt_state
 from .train_step import StepConfig, build_train_step
@@ -119,23 +120,34 @@ def run_training(cfg: ModelConfig, shape: ShapeConfig,
     times: list = []
     try:
         for step in range(start_step, tcfg.steps):
-            batch_np = data.batch_at(step)
-            batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
-            if cfg.family == "encdec":
-                batch["enc_frames"] = jax.numpy.zeros(
-                    (shape.global_batch, cfg.enc_seq, cfg.d_model),
-                    jax.numpy.bfloat16)
-            if cfg.family == "vlm":
-                batch["vis_embed"] = jax.numpy.zeros(
-                    (shape.global_batch, cfg.vis_seq, cfg.d_model),
-                    jax.numpy.bfloat16)
-            t0 = time.time()
+            # obs phases (cat="train"): data → eval → step → ckpt, one
+            # span each per iteration so a trace shows what the wall time
+            # of a training step is made of.
+            with obs.trace_span("train", "data"):
+                batch_np = data.batch_at(step)
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in batch_np.items()}
+                if cfg.family == "encdec":
+                    batch["enc_frames"] = jax.numpy.zeros(
+                        (shape.global_batch, cfg.enc_seq, cfg.d_model),
+                        jax.numpy.bfloat16)
+                if cfg.family == "vlm":
+                    batch["vis_embed"] = jax.numpy.zeros(
+                        (shape.global_batch, cfg.vis_seq, cfg.d_model),
+                        jax.numpy.bfloat16)
+            # monotonic step timing (straggler EWMA differences these;
+            # time.time() can jump under NTP)
+            t0 = time.perf_counter()
             if eval_fn is not None:
-                loss = float(eval_fn(params, batch))
+                with obs.trace_span("train", "eval"):
+                    loss = float(eval_fn(params, batch))
                 report.losses.append(loss)
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-            jax.block_until_ready(metrics["grad_norm"])
-            dt = time.time() - t0
+            with obs.trace_span("train", "step", {"step": step}
+                                if obs.enabled() else None):
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch)
+                jax.block_until_ready(metrics["grad_norm"])
+            dt = time.perf_counter() - t0
             times.append(dt)
             report.step_times.append(dt)
             step_tel.spawns += sched_counts["spawns"]
@@ -153,14 +165,17 @@ def run_training(cfg: ModelConfig, shape: ShapeConfig,
                 if dt > tcfg.straggler_factor * med:
                     report.stragglers += 1
             if (step + 1) % tcfg.ckpt_every == 0 or step + 1 == tcfg.steps:
-                mgr.save(step + 1,
-                         {"params": params, "opt": opt_state},
-                         blocking=(step + 1 == tcfg.steps))
+                with obs.trace_span("train", "ckpt", {"step": step + 1}
+                                    if obs.enabled() else None):
+                    mgr.save(step + 1,
+                             {"params": params, "opt": opt_state},
+                             blocking=(step + 1 == tcfg.steps))
             elif mgr.pending:
                 # the previous step's save overlapped this step's compute;
                 # join + publish now so the durability gap is one step,
                 # not a whole checkpoint interval
-                mgr.wait()
+                with obs.trace_span("train", "ckpt_wait"):
+                    mgr.wait()
             report.completed = step + 1
             if tcfg.failure_at is not None and step + 1 == tcfg.failure_at:
                 raise SimulatedFailure(
