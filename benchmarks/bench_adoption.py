@@ -36,6 +36,12 @@ def _row(surface, policy, s):
             f"{s['p50_ms']:.2f}", f"{s['p99_ms']:.2f}"]
 
 
+def _role(policy):
+    """The serial arm is each surface's oracle (the baseline DCAFE/DLBC
+    must match on counts and beat on joins)."""
+    return "oracle" if policy == "serial" else "candidate"
+
+
 def bench_train_step(records, rows, steps: int = 2):
     cfg = get_config("phi3-mini-3.8b", smoke=True)
     shape = ShapeConfig("bench", 64, 8, "train", microbatches=4)
@@ -52,7 +58,7 @@ def bench_train_step(records, rows, steps: int = 2):
             shutil.rmtree(d, ignore_errors=True)
         s = rep.sched["train_step"]  # already carries policy=<name>
         rows.append(_row("train_step", policy, s))
-        records.append(dict(surface="train_step", **s))
+        records.append(dict(surface="train_step", role=_role(policy), **s))
 
 
 def bench_checkpoint(records, rows, n_saves: int = 3):
@@ -74,18 +80,19 @@ def bench_checkpoint(records, rows, n_saves: int = 3):
             shutil.rmtree(d, ignore_errors=True)
         rows.append(_row("checkpoint", policy, summary))
         records.append(dict(surface="checkpoint", policy=policy,
+                            role=_role(policy),
                             wall_s=wall, n_saves=n_saves, **summary))
 
 
-def bench_moe(records, rows, T: int = 512):
+def bench_moe(records, rows, T: int = 512, repeats: int = 3, seed: int = 0):
     import dataclasses
 
     from .bench_moe_dispatch import skewed_tokens
 
     cfg0 = get_config("mixtral-8x7b", smoke=True)
-    p = MOE.moe_init(jax.random.PRNGKey(0), cfg0, jnp.float32)
+    p = MOE.moe_init(jax.random.PRNGKey(seed), cfg0, jnp.float32)
     # clustered tokens: the load skew where static chunking drops tokens
-    x = skewed_tokens(jax.random.PRNGKey(1), T, cfg0.d_model, 4, 0.05)
+    x = skewed_tokens(jax.random.PRNGKey(seed + 1), T, cfg0.d_model, 4, 0.05)
     for dispatch in ("lc", "dlbc"):
         cfg = dataclasses.replace(cfg0, moe_dispatch=dispatch,
                                   moe_capacity_factor=1.0)
@@ -94,7 +101,7 @@ def bench_moe(records, rows, T: int = 512):
             lambda px, xx: MOE.moe_apply(px, cfg, xx, return_stats=True))
         y, stats = apply(p, x)  # compile
         jax.block_until_ready(y)
-        for _ in range(3):
+        for _ in range(repeats):
             t0 = time.perf_counter()
             y, stats = apply(p, x)
             jax.block_until_ready(y)
@@ -105,14 +112,18 @@ def bench_moe(records, rows, T: int = 512):
         rows.append(_row(f"moe_dispatch(drop={float(stats['dropped_frac']):.3f})",
                          dispatch, s))
         records.append(dict(surface="moe_dispatch", policy=dispatch,
+                            # LC is the static baseline this surface is
+                            # judged against (no serial arm on device)
+                            role="oracle" if dispatch == "lc"
+                            else "candidate",
                             dropped_frac=float(stats["dropped_frac"]), **s))
 
 
-def run():
+def run(seed: int = 0, repeats: int = 3):
     rows, records = [], []
     bench_train_step(records, rows)
     bench_checkpoint(records, rows)
-    bench_moe(records, rows)
+    bench_moe(records, rows, repeats=max(repeats or 3, 3), seed=seed)
     out = report(
         "repro.sched adoption surfaces: spawn/join/latency per policy",
         rows, ["surface", "policy", "spawns", "joins", "p50_ms", "p99_ms"],

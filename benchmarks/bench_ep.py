@@ -49,11 +49,14 @@ INNER = textwrap.dedent("""
 
     obs.enable()  # traced run: the ep.trace.json artifact for CI replay
 
+    # seed/repeats threaded from the parent bench (--seed/--repeats)
+    SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+    ITERS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
     T, CF = 256, 1.0
     cfg0 = dataclasses.replace(get_config("mixtral-8x7b", smoke=True),
                                moe_capacity_factor=CF)
     E, K, d = cfg0.n_experts, cfg0.top_k, cfg0.d_model
-    p = MOE.moe_init(jax.random.PRNGKey(0), cfg0, jnp.float32)
+    p = MOE.moe_init(jax.random.PRNGKey(SEED), cfg0, jnp.float32)
 
     # Balanced router: logits read the first E input dims (identity
     # router) and token t prefers experts (t%E, (t+1)%E) -- every expert
@@ -64,14 +67,14 @@ INNER = textwrap.dedent("""
     xb = jnp.zeros((T, d), jnp.float32)
     t = jnp.arange(T)
     xb = xb.at[t, t % E].set(3.0).at[t, (t + 1) % E].set(2.0)
-    xb = xb + 0.01 * jax.random.normal(jax.random.PRNGKey(1), (T, d))
+    xb = xb + 0.01 * jax.random.normal(jax.random.PRNGKey(SEED + 1), (T, d))
 
     # Hot-expert skew: the stock router biased hard toward expert 0.
     p_hot = dict(p)
     p_hot["router"] = p["router"].at[:, 0].add(4.0)
-    xh = jax.random.normal(jax.random.PRNGKey(2), (T, d))
+    xh = jax.random.normal(jax.random.PRNGKey(SEED + 2), (T, d))
 
-    def timed(fn, iters=3):
+    def timed(fn, iters=ITERS):
         f = jax.jit(fn)
         jax.block_until_ready(f())  # compile
         t0 = time.perf_counter()
@@ -88,7 +91,10 @@ INNER = textwrap.dedent("""
         y, st = MOE.moe_apply(pp, cfg, xx, return_stats=True)
         ms = timed(lambda: MOE.moe_apply(pp, cfg, xx))
         records.append(dict(
-            arm="dp", router=router, capacity_factor=CF, ms=ms,
+            # the single-host two-round dispatch is the oracle arm: EP
+            # must match its combined output (asserted in test_ep)
+            arm="dp", role="oracle", router=router,
+            capacity_factor=CF, ms=ms, seed=SEED, iters=ITERS,
             spawns=int(st["spawns"]), joins=int(st["joins"]),
             rounds=int(st["rounds"]),
             dropped_frac=float(st["dropped_frac"])))
@@ -100,7 +106,8 @@ INNER = textwrap.dedent("""
             y, st = ep_round(pp, ecfg, xx, mesh=mesh, telemetry=tel)
             ms = timed(lambda: MOE.moe_apply(pp, ecfg, xx))
         records.append(dict(
-            arm="ep", router=router, capacity_factor=CF, ms=ms,
+            arm="ep", role="candidate", router=router,
+            capacity_factor=CF, ms=ms, seed=SEED, iters=ITERS,
             spawns=st["spawns"], joins=tel.joins,
             rounds=tel.exchange.rounds,
             dropped_frac=st["dropped_frac"], sent=st["sent"],
@@ -124,9 +131,11 @@ INNER = textwrap.dedent("""
 """)
 
 
-def run():
+def run(seed: int = 0, repeats: int = 3):
     root = Path(__file__).resolve().parent.parent
-    env = dict(os.environ, PYTHONPATH="src")
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_BENCH_SEED=str(seed),
+               REPRO_BENCH_REPEATS=str(max(repeats or 3, 3)))
     out = subprocess.run([sys.executable, "-c", INNER], env=env,
                          capture_output=True, text=True, timeout=900,
                          cwd=root)

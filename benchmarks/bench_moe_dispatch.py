@@ -26,14 +26,14 @@ def skewed_tokens(key, T, d, n_clusters, spread):
     return reps + spread * jax.random.normal(k2, (T, d))
 
 
-def run():
+def run(seed: int = 0):
     cfg0 = get_config("mixtral-8x7b", smoke=True)
-    p = MOE.moe_init(jax.random.PRNGKey(0), cfg0, jnp.float32)
+    p = MOE.moe_init(jax.random.PRNGKey(seed), cfg0, jnp.float32)
     rows, records = [], []
     for cf in (1.0, 1.25, 2.0):
         for skew_clusters, spread in ((4, 0.05), (8, 0.3), (64, 1.0)):
-            x = skewed_tokens(jax.random.PRNGKey(3), 512, cfg0.d_model,
-                              skew_clusters, spread)
+            x = skewed_tokens(jax.random.PRNGKey(seed + 3), 512,
+                              cfg0.d_model, skew_clusters, spread)
             drop = {}
             for dispatch in ("lc", "dlbc"):
                 cfg = dataclasses.replace(cfg0, moe_dispatch=dispatch,
@@ -45,6 +45,9 @@ def run():
                 # the single gate-combine regardless of rounds)
                 records.append(dict(
                     arm=dispatch, capacity_factor=cf,
+                    # LC static chunking is the oracle arm DLBC is
+                    # judged against (drop-rate delta per row)
+                    role="oracle" if dispatch == "lc" else "candidate",
                     clusters=skew_clusters,
                     spawns=int(stats["spawns"]),
                     joins=int(stats["joins"]),

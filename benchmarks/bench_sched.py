@@ -7,6 +7,14 @@ reads the idle count, keeps the smallest chunk on the caller (so
 ``idle + 1`` workers execute), and re-probes in the serial fallback —
 so DLBC throughput must be ≥ LC, with the gap widening when item costs
 are skewed and a static split leaves workers idle.
+
+Harness shape (oracle-first, distribution-gated): the *serial* arm is
+the oracle per workload; every parallel arm is checked for
+result-equivalence against it (same multiset of items executed — a
+fast arm that drops work fails loudly), every arm runs ``repeats``
+seeded repeats emitting its full wall-time distribution, and the gates
+are bootstrap-CI verdicts over those repeats, replayed independently by
+``python -m benchmarks.gates dist sched.json`` in CI.
 """
 
 from __future__ import annotations
@@ -16,7 +24,17 @@ import time
 from repro.obs import trace as obs
 from repro.sched import ThreadExecutor, WorkStealingExecutor
 
-from .common import dist_stats, report, write_trace
+from .common import report, write_trace
+from .harness import Bench
+
+POLICIES = ("serial", "lc", "dlbc", "dlbc-steal")
+#: bootstrap-CI gate thresholds (fail only when the CI excludes them).
+#: skewed is lower: without stealing the 10x heavy head strands on one
+#: static chunk (the stranded-head behavior the grain bench fixes), so
+#: the parallel win there is bounded by the head, not the worker count.
+PARALLEL_SPEEDUP_MIN = {"uniform": 1.5, "skewed": 1.1}
+SKEW_DLBC_VS_LC_MIN = 1.0    # the paper's DLBC >= LC claim, CI-judged
+TAIL_RATIO_MAX = 3.0         # repeat wall p99/p50 stays a bounded tail
 
 
 def _sleep_work(ms: float):
@@ -37,34 +55,68 @@ def _run_once(policy: str, costs, workers: int):
     cls = WorkStealingExecutor if policy == "dlbc-steal" else ThreadExecutor
     pol = "dlbc" if policy == "dlbc-steal" else policy
     ex = cls(n_workers=workers)
+    done = []  # GIL-atomic append: which items actually executed
+
+    def work(ms):
+        _sleep_work(ms)
+        done.append(ms)
+
     try:
         t0 = time.perf_counter()
-        ex.run_loop(costs, _sleep_work, policy=pol)
+        ex.run_loop(costs, work, policy=pol)
         dt = time.perf_counter() - t0
-        return dt, ex.telemetry
+        return dt, ex.telemetry, sorted(done)
     finally:
         ex.shutdown()
 
 
-def run(n_items: int = 64, workers: int = 4, repeats: int = 3):
+def run(n_items: int = 64, workers: int = 4, repeats: int = 5,
+        seed: int = 0):
+    bench = Bench("sched", seed=seed, repeats=max(repeats, 5))
     rows, records = [], []
-    best = {}
     for dist in ("uniform", "skewed"):
         costs = make_costs(n_items, dist)
-        for policy in ("serial", "lc", "dlbc", "dlbc-steal"):
-            runs = [_run_once(policy, costs, workers) for _ in range(repeats)]
+        for policy in POLICIES:
+            runs = []
+
+            def once(rep):
+                dt, tel, done = _run_once(policy, costs, workers)
+                runs.append((dt, tel))
+                return done  # the result-equivalence payload
+
+            oracle = policy == "serial"
+            bench.measure(f"{dist}/{policy}", once, oracle=oracle,
+                          equiv_to=None if oracle else f"{dist}/serial")
+            # judge throughput on the arm's own wall clock, not the
+            # harness wrapper (executor construction is outside `runs`)
             dt, tel = min(runs, key=lambda r: r[0])
             thr = n_items / dt
-            best[(dist, policy)] = thr
             s = tel.summary()
+            arm = bench.arms[f"{dist}/{policy}"]
             rows.append([dist, policy, f"{dt * 1e3:.1f}", f"{thr:.0f}",
                          s["spawns"], s["joins"], s["serial_items"],
                          s["steals"], f"{s['p50_ms']:.2f}",
                          f"{s['p99_ms']:.2f}"])
             records.append(dict(dist=dist, policy=policy, wall_s=dt,
                                 items_per_s=thr,
-                                wall_dist=dist_stats([r[0] for r in runs]),
+                                role=arm["role"],
+                                wall_dist=arm["dist"],
                                 **s))
+
+    # -- distribution gates (replayed from the artifact by CI) ----------
+    for dist in ("uniform", "skewed"):
+        bench.gate_speedup(f"{dist}/dlbc-steal", f"{dist}/serial",
+                           PARALLEL_SPEEDUP_MIN[dist],
+                           name=f"{dist}.steal_vs_oracle")
+        bench.gate_speedup(f"{dist}/dlbc", f"{dist}/serial",
+                           PARALLEL_SPEEDUP_MIN[dist],
+                           name=f"{dist}.dlbc_vs_oracle")
+    # the paper's core ordering, now a CI-judged distribution claim:
+    # wall(lc)/wall(dlbc) >= 1 under skew unless the whole CI disagrees
+    bench.gate_ratio("skewed.dlbc_vs_lc", "skewed/lc", "skewed/dlbc",
+                     ">=", SKEW_DLBC_VS_LC_MIN)
+    bench.gate_tail_ratio("uniform/dlbc", TAIL_RATIO_MAX)
+    bench.gate_tail_ratio("skewed/dlbc-steal", TAIL_RATIO_MAX)
 
     # DCAFE: many loops, one escaped join (host-side finish elimination)
     ex = ThreadExecutor(n_workers=workers)
@@ -82,6 +134,8 @@ def run(n_items: int = 64, workers: int = 4, repeats: int = 3):
                      f"{s['p99_ms']:.2f}"])
         records.append(dict(dist="4loops", policy="dcafe", wall_s=dt,
                             items_per_s=n_items / dt, **s))
+        # finish elimination is count arithmetic, not timing: exact gate
+        bench.gate_exact("dcafe.one_join", s["joins"], "<=", 1)
     finally:
         ex.shutdown()
 
@@ -91,23 +145,25 @@ def run(n_items: int = 64, workers: int = 4, repeats: int = 3):
     obs.clear()
     obs.enable()
     try:
-        _, tel = _run_once("dlbc-steal", make_costs(n_items, "skewed"),
-                           workers)
+        _, tel, _ = _run_once("dlbc-steal", make_costs(n_items, "skewed"),
+                              workers)
         write_trace("sched", tel.summary())
     finally:
         obs.disable()
 
     out = report(
         f"Host-pool policy comparison ({n_items} items, {workers} workers, "
-        f"best of {repeats})",
+        f"{bench.repeats} repeats, seed {seed})",
         rows,
         ["items", "policy", "wall_ms", "items/s", "spawns", "joins",
          "serial", "steals", "p50_ms", "p99_ms"],
-        "sched", records)
-    ok = best[("skewed", "dlbc")] >= best[("skewed", "lc")]
-    print(f"DLBC >= LC under skewed costs: {ok} "
-          f"({best[('skewed', 'dlbc')]:.0f} vs {best[('skewed', 'lc')]:.0f} "
-          f"items/s)")
+        "sched", records, harness=bench.payload())
+    for g in bench.gates:
+        print(f"gate {g['gate']}: value={g['value']:.3g} "
+              f"ci=[{g['ci'][0]:.3g}, {g['ci'][1]:.3g}] "
+              f"{g['op']} {g['threshold']} -> "
+              f"{'ok' if g['ok'] else 'FAIL'}")
+    bench.check()
     return out
 
 

@@ -2,25 +2,32 @@
 SlotExecutor.
 
 Scenario: a *steady* tenant trickles short requests while a *bursty*
-tenant dumps synchronized bursts.  Three runs over the same traces:
+tenant dumps synchronized bursts.  Three arms over the same traces:
 
-* ``solo``      — the steady tenant alone (its unloaded baseline);
+* ``solo``      — the steady tenant alone: the *oracle* arm (its
+                  unloaded baseline — isolation is judged against it);
 * ``fifo``      — both tenants through the single anonymous DLBC queue
                   (no isolation: the burst queues ahead of later steady
                   arrivals);
 * ``weighted``  — per-tenant queues, weighted-DLBC admission
                   (``steady`` weighted above ``bursty``).
 
-Isolation gate (asserted here AND re-checked from the JSON in CI): with
-weight share ``s = w_steady / W``, the steady tenant keeps ≥ ``s`` of the
-slot capacity, so its p99 may grow by at most the inverse share plus one
-bursty service time (slots are non-preemptive — a just-admitted burst
-request holds its slot for its full decode):
+Isolation gate: with weight share ``s = w_steady / W``, the steady
+tenant keeps ≥ ``s`` of the slot capacity, so its p99 may grow by at
+most the inverse share plus one bursty service time (slots are
+non-preemptive — a just-admitted burst request holds its slot for its
+full decode):
 
     p99_weighted(steady) <= p99_solo(steady) / s + bursty_max_new + slack
 
-Telemetry conservation is gated too: per-tenant spawns/joins must sum to
-the global counters.
+The whole scenario triple runs ``repeats`` times under per-repeat seeds
+and the gate is a *bootstrap-CI* verdict over the per-repeat ratio
+``p99_weighted / bound`` — a single noisy repeat widens the interval
+instead of failing the lane (the old single-run assert was exactly the
+flaky-runner hazard the harness exists to kill).  CI replays the same
+verdict from ``tenants.json`` via ``python -m benchmarks.gates
+tenants``.  Telemetry conservation (per-tenant spawns/joins sum to the
+globals) stays an exact per-repeat assert: counters carry no noise.
 """
 
 from __future__ import annotations
@@ -35,10 +42,15 @@ from repro.models import model as MDL
 from repro.serve.batcher import ContinuousBatcher, Request
 
 from .common import report
+from .harness import Bench
 
 STEADY_MAX_NEW = 4
 BURSTY_MAX_NEW = 8
 SLACK_STEPS = 4
+#: CI-judged thresholds on per-repeat ratios (fail only when the
+#: bootstrap interval excludes them)
+ISOLATION_RATIO_MAX = 1.0   # p99_weighted / bound
+WEIGHTED_VS_FIFO_MAX = 1.0  # weighted must not serve steady worse
 
 
 def _cfg():
@@ -63,11 +75,10 @@ def make_traces(steps: int, rng):
     return steady, bursty
 
 
-def run(steps: int = 200, slots: int = 4, weights=(3.0, 1.0), seed: int = 0):
-    cfg = _cfg()
-    params = MDL.init_params(cfg, jax.random.PRNGKey(seed))
+def _run_repeat(cfg, params, steps, slots, weights, seed):
+    """One pass over the three scenarios under one seed; returns the
+    per-scenario records and the steady-tenant p99s."""
     w_steady, w_bursty = weights
-    share = w_steady / (w_steady + w_bursty)
     max_steps = steps * 20  # drain room well past the arrival horizon
 
     def fresh(policy, tenants=None):
@@ -94,7 +105,7 @@ def run(steps: int = 200, slots: int = 4, weights=(3.0, 1.0), seed: int = 0):
     b.run(steady + bursty, max_steps=max_steps)
     scenarios["weighted"], steady_traces["weighted"] = b, steady
 
-    rows, records = [], []
+    records, steady_p99s = [], {}
     for name, batcher in scenarios.items():
         st = batcher.stats
         tstats = {t: s.summary() for t, s in batcher.tenant_stats.items()}
@@ -105,20 +116,19 @@ def run(steps: int = 200, slots: int = 4, weights=(3.0, 1.0), seed: int = 0):
             lat = [r.done_step - r.arrive_step for r in steady_traces[name]
                    if r.done_step is not None]
             steady_p99 = float(np.percentile(lat, 99)) if lat else 0.0
-        rec = dict(scenario=name, policy=batcher.policy, steps=st.steps,
-                   utilization=st.utilization,
-                   p99_latency=st.p99_latency,
-                   steady_p99=float(steady_p99),
-                   slot_shares=batcher.slot_shares(),
-                   sched=tele.summary(),
-                   tenant_stats=tstats,
-                   weights=dict(steady=w_steady, bursty=w_bursty))
-        records.append(rec)
-        rows.append([name, st.steps, f"{st.utilization:.3f}",
-                     f"{float(steady_p99):.1f}", f"{st.p99_latency:.1f}"])
+        steady_p99s[name] = float(steady_p99)
+        records.append(dict(
+            scenario=name, policy=batcher.policy, steps=st.steps,
+            seed=seed, utilization=st.utilization,
+            p99_latency=st.p99_latency,
+            steady_p99=float(steady_p99),
+            role="oracle" if name == "solo" else "candidate",
+            slot_shares=batcher.slot_shares(),
+            sched=tele.summary(),
+            tenant_stats=tstats,
+            weights=dict(steady=w_steady, bursty=w_bursty)))
 
-    by_name = {r["scenario"]: r for r in records}
-    # -- telemetry conservation: per-tenant spawns/joins sum to global ------
+    # -- telemetry conservation: exact, asserted on every repeat ---------
     for name in ("solo", "weighted"):
         tele = scenarios[name].sched.telemetry
         totals = tele.tenant_totals()
@@ -126,24 +136,68 @@ def run(steps: int = 200, slots: int = 4, weights=(3.0, 1.0), seed: int = 0):
         assert totals["joins"] == tele.joins, (name, totals, tele.joins)
         assert tele.spawns == tele.joins, \
             (name, "quiescence: every admitted request completed")
-    # -- isolation gate ------------------------------------------------------
-    solo_p99 = by_name["solo"]["steady_p99"]
-    weighted_p99 = by_name["weighted"]["steady_p99"]
-    bound = solo_p99 / share + BURSTY_MAX_NEW + SLACK_STEPS
-    print(f"isolation: steady p99 solo={solo_p99:.1f} "
-          f"weighted={weighted_p99:.1f} fifo={by_name['fifo']['steady_p99']:.1f} "
-          f"bound={bound:.1f} (share={share:.2f})")
-    assert weighted_p99 <= bound, \
-        f"bursty tenant broke steady tenant's p99 beyond its weight " \
-        f"share: {weighted_p99:.1f} > {bound:.1f}"
-    assert weighted_p99 <= by_name["fifo"]["steady_p99"], \
-        "weighted admission must not serve the steady tenant worse than " \
-        "the anonymous FIFO it replaces"
+    return records, steady_p99s
+
+
+def run(steps: int = 200, slots: int = 4, weights=(3.0, 1.0),
+        seed: int = 0, repeats: int = 5):
+    cfg = _cfg()
+    params = MDL.init_params(cfg, jax.random.PRNGKey(seed))
+    w_steady, w_bursty = weights
+    share = w_steady / (w_steady + w_bursty)
+    repeats = max(int(repeats), 5)
+    bench = Bench("tenants", seed=seed, repeats=repeats)
+
+    all_records, p99s = [], {"solo": [], "fifo": [], "weighted": []}
+    iso_ratios, fifo_ratios, bounds = [], [], []
+    for rep in range(repeats):
+        records, steady_p99 = _run_repeat(cfg, params, steps, slots,
+                                          weights, seed + rep)
+        for r in records:
+            r["repeat"] = rep
+        all_records.extend(records)
+        for name in p99s:
+            p99s[name].append(steady_p99[name])
+        bound = steady_p99["solo"] / share + BURSTY_MAX_NEW + SLACK_STEPS
+        bounds.append(bound)
+        iso_ratios.append(steady_p99["weighted"] / bound)
+        fifo_ratios.append(
+            steady_p99["weighted"] / steady_p99["fifo"]
+            if steady_p99["fifo"] > 0 else 0.0)
+
+    for name, samples in p99s.items():
+        bench.add_samples(name, samples, unit="steps",
+                          oracle=name == "solo")
+    bench.add_samples("isolation_ratio", iso_ratios, unit="ratio")
+    bench.add_samples("weighted_vs_fifo", fifo_ratios, unit="ratio")
+    bench.gate_samples("isolation", "isolation_ratio", "<=",
+                       ISOLATION_RATIO_MAX, p=50)
+    bench.gate_samples("weighted_vs_fifo", "weighted_vs_fifo", "<=",
+                       WEIGHTED_VS_FIFO_MAX, p=50)
+
+    rows = []
+    for name in ("solo", "fifo", "weighted"):
+        d = bench.arms[name]["dist"]
+        rows.append([name, f"{d['p50']:.1f}", f"{d['p99']:.1f}",
+                     f"{d['max']:.1f}", d["n"]])
+    print(f"isolation: steady p99 solo={np.median(p99s['solo']):.1f} "
+          f"weighted={np.median(p99s['weighted']):.1f} "
+          f"fifo={np.median(p99s['fifo']):.1f} "
+          f"bound~{np.median(bounds):.1f} (share={share:.2f}, "
+          f"{repeats} repeats)")
+    for g in bench.gates:
+        print(f"gate {g['gate']}: value={g['value']:.3f} "
+              f"ci=[{g['ci'][0]:.3f}, {g['ci'][1]:.3f}] "
+              f"{g['op']} {g['threshold']} -> "
+              f"{'ok' if g['ok'] else 'FAIL'}")
+    bench.check()
 
     return report(
-        "Multi-tenant serving: weighted-DLBC isolation under bursts",
-        rows, ["scenario", "steps", "util", "steady_p99", "p99_all"],
-        "tenants", records)
+        "Multi-tenant serving: weighted-DLBC isolation under bursts "
+        f"({repeats} repeats, seed {seed})",
+        rows, ["scenario", "steady_p50", "steady_p99", "steady_max",
+               "repeats"],
+        "tenants", all_records, harness=bench.payload())
 
 
 def main(argv=None):
@@ -151,8 +205,10 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=5)
     args = ap.parse_args(argv)
-    run(steps=args.steps, slots=args.slots, seed=args.seed)
+    run(steps=args.steps, slots=args.slots, seed=args.seed,
+        repeats=args.repeats)
 
 
 if __name__ == "__main__":

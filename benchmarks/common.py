@@ -1,22 +1,90 @@
-"""Shared benchmark utilities: table printing + JSON result persistence."""
+"""Shared benchmark utilities: table printing + JSON result persistence.
+
+Every saved artifact is wrapped in a versioned envelope::
+
+    {"schema_version": 2, "bench": name, "commit": "<git sha>",
+     "seed": ..., "repeats": ..., "harness": {...}?, "records": [...]}
+
+so the trajectory differ (``benchmarks.gates trajectory``) can refuse to
+compare across incompatible schemas instead of KeyError-ing, and every
+record is attributable to the commit that produced it.  Pre-envelope
+artifacts (a bare list) are still readable via :func:`load_records` and
+are treated as ``schema_version == 1``.
+"""
 
 from __future__ import annotations
 
 import json
+import subprocess
 import time
 from pathlib import Path
 
 from repro.sched.telemetry import LogHistogram
 
+from .harness import SCHEMA_VERSION
+
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
 TRACE_DIR = RESULTS_DIR / "trace"
 
+#: run-wide context set by ``benchmarks.run`` (--seed / --repeats) so
+#: every artifact records what it was measured with — trajectory diffs
+#: must compare like with like.
+RUN_CONTEXT = {"seed": None, "repeats": None}
 
-def save(name: str, payload):
+
+def set_run_context(seed=None, repeats=None):
+    if seed is not None:
+        RUN_CONTEXT["seed"] = int(seed)
+    if repeats is not None:
+        RUN_CONTEXT["repeats"] = int(repeats)
+
+
+def git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=Path(__file__).resolve().parent.parent,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def envelope(name: str, records, harness=None) -> dict:
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "bench": name,
+        "commit": git_commit(),
+        "seed": RUN_CONTEXT["seed"],
+        "repeats": RUN_CONTEXT["repeats"],
+        "records": records,
+    }
+    if harness is not None:
+        doc["harness"] = harness
+    return doc
+
+
+def save(name: str, payload, harness=None):
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     out = RESULTS_DIR / f"{name}.json"
-    out.write_text(json.dumps(payload, indent=1, default=str))
+    out.write_text(json.dumps(envelope(name, payload, harness), indent=1,
+                              default=str))
     return out
+
+
+def load_envelope(path) -> dict:
+    """Read an artifact in either format; bare-list artifacts come back
+    wrapped as ``schema_version == 1`` with no commit."""
+    doc = json.loads(Path(path).read_text())
+    if isinstance(doc, list):
+        return {"schema_version": 1, "bench": Path(path).stem,
+                "commit": "unknown", "records": doc}
+    return doc
+
+
+def load_records(path) -> list:
+    """The records list, whatever the envelope vintage."""
+    return load_envelope(path)["records"]
 
 
 def table(rows, headers):
@@ -30,12 +98,15 @@ def table(rows, headers):
     print()
 
 
-def report(title, rows, headers, name, records):
+def report(title, rows, headers, name, records, harness=None):
     """Print a titled results table and persist the records as JSON —
-    the one emit path shared by every benchmark."""
+    the one emit path shared by every benchmark.  ``harness`` is a
+    :meth:`benchmarks.harness.Bench.payload` dict; when given, the
+    saved envelope carries the arms/gates/trajectory section the CI
+    ``dist`` and ``trajectory`` gates replay."""
     print(f"== {title}")
     table(rows, headers)
-    path = save(name, records)
+    path = save(name, records, harness)
     print(f"[saved {path}]")
     return records
 

@@ -1,0 +1,397 @@
+"""Named CI gates, replayable from benchmark artifacts.
+
+Every regression gate CI enforces lives here as a named check over a
+saved JSON artifact — the exact same code runs locally and in Actions
+(the old inline ``python - <<EOF`` blobs could not be executed or
+tested outside CI)::
+
+    python -m benchmarks.gates afe        experiments/bench/adoption.json
+    python -m benchmarks.gates grain      experiments/bench/grain.json
+    python -m benchmarks.gates ep         experiments/bench/ep.json
+    python -m benchmarks.gates tenants    experiments/bench/tenants.json
+    python -m benchmarks.gates trace      experiments/bench
+    python -m benchmarks.gates dist       experiments/bench/sched.json
+    python -m benchmarks.gates trajectory experiments/bench \\
+        --prev prev/trajectory.json --out experiments/bench/trajectory.json
+
+Conventions shared by every gate:
+
+* a **missing artifact is a skip, not a failure** — when an earlier
+  step failed before the bench wrote the file, that step's failure is
+  the signal; piling a traceback on top hides it;
+* gates **re-derive** their verdicts from the raw data in the artifact
+  (bootstrap CIs are recomputed from the stored samples via
+  :func:`benchmarks.harness.replay_gate`) — a producer cannot pass CI
+  by writing ``ok: true``;
+* distribution gates fail only when the bootstrap CI *excludes* the
+  threshold — one noisy repeat widens the interval instead of flipping
+  the verdict (see ``benchmarks/harness.py``).
+
+The ``trajectory`` command collects every gated metric from a results
+directory into one ``trajectory.json`` and diffs it against the
+previous commit's (actions/cache-backed in CI), failing on a >10%
+regression on any gated surface; artifacts with a different
+``schema_version`` are refused (reported, not compared) instead of
+KeyError-ing mid-diff.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from pathlib import Path
+
+from .harness import SCHEMA_VERSION, replay_gate
+from .common import load_envelope, load_records
+
+#: trajectory regression tolerance: >10% on any gated surface fails.
+MAX_REGRESS = 0.10
+
+
+def _skip(path, why="earlier step failed") -> bool:
+    if not os.path.exists(str(path)):
+        print(f"{path} missing ({why}); skipping gate")
+        return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# the five gates extracted from .github/workflows/ci.yml inline blobs
+# ---------------------------------------------------------------------------
+
+def gate_afe(path) -> list:
+    """DCAFE joins <= LC joins on every adoption surface — the paper's
+    aggressive-finish-elimination claim carried onto production
+    surfaces.  (bench_adoption asserts the same invariant while it
+    runs; this re-checks the saved JSON independently.)"""
+    if _skip(path):
+        return []
+    recs = load_records(path)
+    joins = {(r["surface"], r["policy"]): r["joins"]
+             for r in recs if "surface" in r}
+    bad = []
+    for surface in ("train_step", "checkpoint"):
+        lc, dcafe = joins[(surface, "lc")], joins[(surface, "dcafe")]
+        print(f"{surface}: dcafe={dcafe} lc={lc}")
+        if dcafe > lc:
+            bad.append(f"DCAFE joined more than LC on {surface} — "
+                       "the aggressive-finish-elimination claim regressed")
+    return bad
+
+
+def gate_grain(path) -> list:
+    """Adaptive-grain gates: uniform speedup, skew rebalance, spawn
+    collapse, steals on skew — judged from the bootstrap-CI harness
+    section when present (repeat distributions), with the structural
+    counter checks re-derived from the records either way."""
+    if _skip(path):
+        return []
+    env = load_envelope(path)
+    recs = [r for r in env["records"] if r.get("arm") != "gates"]
+    # every attempt is recorded; judge the one the bench judged
+    last = max(r.get("attempt", 1) for r in recs)
+    by = {(r["dist"], r["arm"]): r for r in recs
+          if r.get("attempt", 1) == last}
+    bad = _replay_harness(env, label="grain")
+    if bad is None:  # pre-harness artifact: point-estimate fallback
+        bad = []
+        speedup = (by["uniform", "adaptive"]["items_per_s"]
+                   / by["uniform", "grain1"]["items_per_s"])
+        fraction = (by["skewed", "adaptive"]["items_per_s"]
+                    / by["skewed", "grain1"]["items_per_s"])
+        print(f"uniform adaptive/grain1 speedup: {speedup:.2f}x")
+        print(f"skewed adaptive/grain1 fraction: {fraction:.2f}")
+        if speedup < 3.0:
+            bad.append(f"uniform speedup {speedup:.2f}x < 3x")
+        if fraction < 0.9:
+            bad.append(f"skewed fraction {fraction:.2f} < 0.9")
+    print(f"uniform spawns/loop: adaptive "
+          f"{by['uniform', 'adaptive']['spawns_per_loop']:.1f} vs "
+          f"grain1 {by['uniform', 'grain1']['spawns_per_loop']:.1f}")
+    if (by["uniform", "adaptive"]["spawns_per_loop"]
+            >= by["uniform", "grain1"]["spawns_per_loop"]):
+        bad.append("spawns did not collapse")
+    if by["skewed", "adaptive"]["steals"] <= 0:
+        bad.append("no steals on skew (rebalancing dead)")
+    return bad
+
+
+def gate_ep(path) -> list:
+    """Expert-parallel dispatch: every EP round performs exactly ONE
+    join (AFE), sent == received across the exchange, and the balanced
+    router drops zero pairs at capacity_factor >= 1.0."""
+    if _skip(path):
+        return []
+    recs = [r for r in load_records(path) if r.get("arm") == "ep"]
+    bad = []
+    for r in recs:
+        print(f"ep/{r['router']}: joins={r['joins']} "
+              f"rounds={r['rounds']} sent={r['sent']} "
+              f"received={r['received']} dropped={r['dropped']}")
+        if r["joins"] != r["rounds"] or r["joins"] != 1:
+            bad.append(f"{r['router']}: {r['joins']} joins over "
+                       f"{r['rounds']} rounds (AFE regressed)")
+        if r["sent"] != r["received"]:
+            bad.append(f"{r['router']}: exchange lost pairs "
+                       f"({r['sent']} sent, {r['received']} recv)")
+        if (r["router"] == "balanced"
+                and r["capacity_factor"] >= 1.0
+                and r["dropped"] != 0):
+            bad.append(f"balanced router dropped {r['dropped']} "
+                       "pairs (exchange plan must reassign)")
+    if not recs:
+        bad.append("no ep records in artifact")
+    return bad
+
+
+def gate_trace(results_dir) -> list:
+    """Replay every trace artifact through the exporter: trace-derived
+    spawn/join/steal/split/complete counts must equal the embedded
+    telemetry (conservation), and the tracer's measured overhead on the
+    uniform grain loop must stay within its 5% budget."""
+    from repro.obs import export as obs_export
+
+    results_dir = Path(results_dir)
+    paths = sorted(glob.glob(str(results_dir / "trace" / "*.trace.json")))
+    if not paths:
+        print("no trace artifacts (earlier step failed); skipping gate")
+        return []
+    bad = []
+    for path in paths:
+        doc = json.load(open(path))
+        tel = doc.get("telemetry")
+        if tel is None:
+            bad.append(f"{path}: no embedded telemetry")
+            continue
+        check = obs_export.crosscheck(doc, tel)
+        print(f"{os.path.basename(path)}: ok={check['ok']} "
+              f"counts={check['trace']}")
+        if not check["ok"]:
+            bad.append(f"{path}: {check['mismatches']}")
+    gpath = results_dir / "grain.json"
+    if gpath.exists():
+        gates = [r for r in load_records(gpath)
+                 if r.get("arm") == "gates"][-1]
+        frac = gates["trace_overhead_frac"]
+        print(f"tracing overhead on uniform grain loop: {frac:.1%}")
+        if frac > 0.05:
+            bad.append(f"tracing overhead {frac:.1%} > 5% budget")
+    return bad
+
+
+def gate_tenants(path) -> list:
+    """Tenant telemetry conservation — per-tenant spawn/join counters
+    must sum to the globals and every admitted request must have
+    completed — plus the bootstrap-CI isolation gates when the harness
+    section is present."""
+    if _skip(path):
+        return []
+    env = load_envelope(path)
+    bad = []
+    for rec in env["records"]:
+        sched = rec.get("sched")
+        if sched is None:
+            continue
+        tenants = sched.get("tenants")
+        if not tenants:  # the anonymous-fifo scenario has none
+            continue
+        s = sum(t["spawns"] for t in tenants.values())
+        j = sum(t["joins"] for t in tenants.values())
+        print(f"{rec['scenario']}: per-tenant spawns={s} joins={j} "
+              f"global spawns={sched['spawns']} joins={sched['joins']}")
+        if s != sched["spawns"] or j != sched["joins"]:
+            bad.append(f"{rec['scenario']}: per-tenant != global")
+        if sched["spawns"] != sched["joins"]:
+            bad.append(f"{rec['scenario']}: spawns != joins")
+    replayed = _replay_harness(env, label="tenants")
+    if replayed:
+        bad.extend(replayed)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# distribution gates (harness section replay)
+# ---------------------------------------------------------------------------
+
+def _replay_harness(env: dict, label: str = "dist"):
+    """Re-evaluate every stored harness gate from its raw samples.
+    Returns None when the artifact has no harness section (pre-harness
+    producer), else the list of failures."""
+    harness = env.get("harness")
+    if not harness:
+        return None
+    bad = []
+    for gate in harness.get("gates", []):
+        res = replay_gate(gate, harness.get("arms", {}))
+        lo, hi = res["ci"]
+        print(f"{label}/{res['gate']}: value={res['value']:.4g} "
+              f"ci=[{lo:.4g}, {hi:.4g}] {res['op']} {res['threshold']} "
+              f"-> {'ok' if res['ok'] else 'FAIL'}")
+        if not res["ok"]:
+            bad.append(f"{res['gate']}: ci=[{lo:.4g}, {hi:.4g}] "
+                       f"excludes {res['op']} {res['threshold']}")
+        if bool(res["ok"]) != bool(gate.get("ok", res["ok"])):
+            bad.append(f"{res['gate']}: stored verdict "
+                       f"{gate.get('ok')} != replayed {res['ok']} "
+                       "(artifact lied)")
+    return bad
+
+
+def gate_dist(path) -> list:
+    """Replay the declarative distribution gates of any harness-emitting
+    bench artifact (bootstrap CIs recomputed from the stored samples)."""
+    if _skip(path):
+        return []
+    env = load_envelope(path)
+    bad = _replay_harness(env, label=env.get("bench", "dist"))
+    if bad is None:
+        return [f"{path}: no harness section — bench did not emit "
+                "distribution gates"]
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# cross-PR trajectory
+# ---------------------------------------------------------------------------
+
+def collect_trajectory(results_dir) -> dict:
+    """Gather every gated metric from a results directory into one
+    diffable document: ``{surface -> {value, better, ci?}}``."""
+    results_dir = Path(results_dir)
+    surfaces, commit = {}, "unknown"
+    for path in sorted(results_dir.glob("*.json")):
+        if path.name == "trajectory.json":
+            continue
+        try:
+            env = load_envelope(path)
+        except (json.JSONDecodeError, OSError):
+            continue
+        if env.get("schema_version") != SCHEMA_VERSION:
+            print(f"[trajectory] {path.name}: schema_version "
+                  f"{env.get('schema_version')} != {SCHEMA_VERSION}; "
+                  "not collected")
+            continue
+        if env.get("commit", "unknown") != "unknown":
+            commit = env["commit"]
+        for metric, rec in (env.get("harness") or {}).get(
+                "trajectory", {}).items():
+            surfaces[f"{env['bench']}/{metric}"] = rec
+    return {"schema_version": SCHEMA_VERSION, "commit": commit,
+            "surfaces": surfaces}
+
+
+def diff_trajectory(current: dict, previous: dict,
+                    max_regress: float = MAX_REGRESS) -> list:
+    """Fail on >``max_regress`` regression on any gated surface.
+
+    Direction-aware (``better: lower|higher``).  When the current
+    metric carries a bootstrap CI, the *conservative edge* is compared
+    (CI low for lower-better): a regression must be outside the
+    current run's own noise band to fail, matching the gate semantics.
+    Schema mismatches refuse to compare (reported, not failed).
+    """
+    if previous.get("schema_version") != current.get("schema_version"):
+        print(f"[trajectory] previous schema_version "
+              f"{previous.get('schema_version')} != current "
+              f"{current.get('schema_version')}; refusing to compare "
+              "(baseline resets this run)")
+        return []
+    bad = []
+    prev_surfaces = previous.get("surfaces", {})
+    for name, cur in sorted(current.get("surfaces", {}).items()):
+        prev = prev_surfaces.get(name)
+        if prev is None:
+            print(f"[trajectory] {name}: new surface "
+                  f"(value={cur['value']:.4g})")
+            continue
+        better = cur.get("better", "lower")
+        value = cur["value"]
+        edge = value
+        if cur.get("ci"):
+            edge = cur["ci"][0] if better == "lower" else cur["ci"][1]
+        pv = prev["value"]
+        if better == "lower":
+            regressed = pv > 0 and edge > pv * (1 + max_regress)
+        else:
+            regressed = pv > 0 and edge < pv * (1 - max_regress)
+        delta = (value - pv) / pv if pv else 0.0
+        print(f"[trajectory] {name}: {pv:.4g} -> {value:.4g} "
+              f"({delta:+.1%}, better={better})"
+              f"{' REGRESSED' if regressed else ''}")
+        if regressed:
+            bad.append(f"{name}: {pv:.4g} -> {value:.4g} ({delta:+.1%} "
+                       f"beyond the {max_regress:.0%} budget, "
+                       f"better={better})")
+    dropped = sorted(set(prev_surfaces) - set(current.get("surfaces", {})))
+    for name in dropped:
+        print(f"[trajectory] {name}: no longer reported")
+    return bad
+
+
+def cmd_trajectory(args) -> list:
+    current = collect_trajectory(args.artifact)
+    if not current["surfaces"]:
+        print("no gated surfaces collected; skipping trajectory gate")
+        return []
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(json.dumps(current, indent=1))
+        print(f"[trajectory saved {args.out}: "
+              f"{len(current['surfaces'])} surfaces @ "
+              f"{current['commit'][:12]}]")
+    if not args.prev or not os.path.exists(args.prev):
+        print("no previous trajectory (first run on this branch); "
+              "baseline established")
+        return []
+    previous = json.loads(Path(args.prev).read_text())
+    return diff_trajectory(current, previous, args.max_regress)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+GATES = {
+    "afe": gate_afe,
+    "grain": gate_grain,
+    "ep": gate_ep,
+    "trace": gate_trace,
+    "tenants": gate_tenants,
+    "dist": gate_dist,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.gates",
+        description="replay a named CI gate against a saved artifact")
+    ap.add_argument("gate", choices=sorted(GATES) + ["trajectory"])
+    ap.add_argument("artifact",
+                    help="artifact JSON path (or results dir for "
+                         "trace/trajectory)")
+    ap.add_argument("--prev", default=None,
+                    help="[trajectory] previous trajectory.json to diff")
+    ap.add_argument("--out", default=None,
+                    help="[trajectory] where to write this run's "
+                         "trajectory.json")
+    ap.add_argument("--max-regress", type=float, default=MAX_REGRESS,
+                    help="[trajectory] relative p99 regression budget")
+    args = ap.parse_args(argv)
+    if args.gate == "trajectory":
+        bad = cmd_trajectory(args)
+    else:
+        bad = GATES[args.gate](args.artifact)
+    if bad:
+        print(f"GATE {args.gate} FAILED:", file=sys.stderr)
+        for b in bad:
+            print(f"  - {b}", file=sys.stderr)
+        return 1
+    print(f"GATE {args.gate} ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,386 @@
+"""Oracle-first, distribution-gated benchmark harness.
+
+DCAFE's headline claims are *distributional* — geomean speedups and tail
+behavior across kernels — yet a single-run threshold check can pass a
+real regression or fail a good PR on one noisy sample.  This layer is
+the shared vocabulary every gated benchmark speaks (ROADMAP
+"oracle-first, distribution-gated benchmark harness"):
+
+* **Oracle arm** — every bench declares the serial/LC baseline it must
+  match or beat.  Where the arms produce comparable results (item
+  counts, token sums), the harness checks result-equivalence against
+  the oracle on every repeat, so a "fast" arm that silently drops work
+  fails loudly.
+* **Repeated runs** — each arm runs ``repeats`` times under a recorded
+  seed and emits the full per-repeat sample list plus a
+  :class:`~repro.sched.telemetry.LogHistogram` summary, not just a
+  best-of scalar.
+* **Declarative gates** — tail ratios (p99/p50), arm-vs-oracle ratios
+  and speedups are gated through *bootstrap confidence intervals*
+  across the repeats: a gate only FAILS when the whole CI lands on the
+  wrong side of the threshold.  A CI that straddles the threshold is
+  inconclusive and passes — flaky single-sample verdicts cannot kill a
+  good PR, and a real regression shifts the whole interval.
+* **Trajectory metrics** — each gate contributes its point value (and
+  CI) to a per-bench ``trajectory`` dict; ``benchmarks.gates
+  trajectory`` diffs those across commits and fails on a >10% p99
+  regression on any gated surface.
+
+Everything here is stdlib + ``repro.sched.telemetry`` — the gates must
+be re-runnable from a bare JSON artifact on a laptop with no jax.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.sched.telemetry import LogHistogram, percentile
+
+#: Bump when the emitted artifact shape changes incompatibly.  The
+#: trajectory differ refuses to compare artifacts across versions
+#: instead of KeyError-ing mid-diff.
+SCHEMA_VERSION = 2
+
+#: bootstrap defaults: resamples per gate and two-sided CI mass.
+#: 1000 resamples of <=16 repeats is <1 ms per gate; alpha=0.10 gives a
+#: 90% interval — wide enough that honest noise straddles, tight enough
+#: that a real 2x shift excludes the threshold.
+N_BOOT = 1000
+ALPHA = 0.10
+
+
+def bootstrap_ci(samples: Sequence[float],
+                 stat: Callable[[Sequence[float]], float],
+                 *, n_boot: int = N_BOOT, seed: int = 0,
+                 alpha: float = ALPHA):
+    """Percentile-bootstrap CI of ``stat`` over ``samples``.
+
+    Deterministic for a given ``seed`` — the same artifact replayed in
+    CI and locally yields the same interval, so a gate verdict is
+    reproducible from the JSON alone.
+    """
+    n = len(samples)
+    if n == 0:
+        return (0.0, 0.0)
+    if n == 1:
+        v = stat(samples)
+        return (v, v)
+    rng = random.Random(seed)
+    stats = sorted(
+        stat([samples[rng.randrange(n)] for _ in range(n)])
+        for _ in range(n_boot))
+    lo = stats[int((alpha / 2) * (n_boot - 1))]
+    hi = stats[int((1 - alpha / 2) * (n_boot - 1))]
+    return (lo, hi)
+
+
+def bootstrap_ratio_ci(num: Sequence[float], den: Sequence[float],
+                       stat: Callable[[Sequence[float]], float],
+                       *, n_boot: int = N_BOOT, seed: int = 0,
+                       alpha: float = ALPHA):
+    """CI of ``stat(num)/stat(den)`` with both arms resampled
+    independently per bootstrap iteration (unpaired arms: the repeats of
+    one arm say nothing about the matching repeat of the other)."""
+    if not num or not den:
+        return (0.0, 0.0)
+    rng = random.Random(seed)
+
+    def resample(xs):
+        n = len(xs)
+        return [xs[rng.randrange(n)] for _ in range(n)]
+
+    ratios = []
+    for _ in range(n_boot):
+        d = stat(resample(den))
+        n_ = stat(resample(num))
+        ratios.append(n_ / d if d > 0 else 0.0)
+    ratios.sort()
+    lo = ratios[int((alpha / 2) * (n_boot - 1))]
+    hi = ratios[int((1 - alpha / 2) * (n_boot - 1))]
+    return (lo, hi)
+
+
+def pstat(p: float) -> Callable[[Sequence[float]], float]:
+    """The percentile-``p`` statistic as a bootstrap-able callable."""
+    return lambda xs: percentile(xs, p)
+
+
+def ci_verdict(ci, op: str, threshold: float) -> bool:
+    """Distribution-gate semantics: FAIL only when the whole CI is on
+    the wrong side of the threshold.
+
+    * ``op="<="`` (value must stay below): fails iff ``ci.lo > thr``.
+    * ``op=">="`` (value must stay above): fails iff ``ci.hi < thr``.
+
+    A straddling CI is *inconclusive* → pass.  This is deliberately
+    asymmetric with a point check: one noisy repeat widens the interval
+    instead of flipping the verdict.
+    """
+    lo, hi = ci
+    if op == "<=":
+        return not lo > threshold
+    if op == ">=":
+        return not hi < threshold
+    raise ValueError(f"unknown gate op {op!r}")
+
+
+def sample_dist(samples: Sequence[float], unit: str = "s") -> Dict:
+    """Exact-percentile distribution summary of repeat samples, plus the
+    LogHistogram shape when the unit is seconds (so bench tables and
+    runtime telemetry histograms stay comparable — same bucketing)."""
+    xs = list(samples)
+    if not xs:
+        return {"n": 0, "unit": unit}
+    out = dict(
+        n=len(xs), unit=unit,
+        mean=sum(xs) / len(xs), min=min(xs), max=max(xs),
+        p50=percentile(xs, 50), p90=percentile(xs, 90),
+        p99=percentile(xs, 99),
+    )
+    out["tail_p99_p50"] = out["p99"] / out["p50"] if out["p50"] > 0 else 1.0
+    if unit == "s":
+        out["latency_hist"] = LogHistogram().extend(xs).summary()
+    return out
+
+
+class Bench:
+    """One oracle-first benchmark: named arms, repeated seeded runs,
+    bootstrap-CI gates, and the trajectory metrics CI diffs across PRs.
+
+    Typical shape::
+
+        bench = Bench("sched", seed=seed, repeats=repeats)
+        bench.measure("uniform/serial", run_serial, oracle=True)
+        bench.measure("uniform/dlbc", run_dlbc, equiv_to="uniform/serial")
+        bench.gate_speedup("uniform/dlbc", "uniform/serial", 1.5)
+        bench.gate_tail_ratio("uniform/dlbc", 3.0)
+        bench.check()                       # raises if a gate FAILED
+        report(..., harness=bench.payload())
+    """
+
+    def __init__(self, name: str, *, seed: int = 0,
+                 repeats: Optional[int] = None,
+                 n_boot: int = N_BOOT, alpha: float = ALPHA):
+        self.name = name
+        self.seed = int(seed)
+        self.repeats = int(repeats) if repeats else 5
+        self.n_boot = n_boot
+        self.alpha = alpha
+        self.arms: Dict[str, Dict] = {}
+        self.gates: List[Dict] = []
+        self.trajectory: Dict[str, Dict] = {}
+
+    # -- arms ------------------------------------------------------------
+
+    def add_samples(self, arm: str, samples: Sequence[float], *,
+                    oracle: bool = False, unit: str = "s",
+                    results: Optional[list] = None,
+                    meta: Optional[Dict] = None) -> Dict:
+        """Register an arm from externally measured repeat samples."""
+        rec = dict(
+            name=arm, role="oracle" if oracle else "candidate", unit=unit,
+            samples=[float(s) for s in samples],
+            dist=sample_dist(samples, unit),
+        )
+        if meta:
+            rec["meta"] = meta
+        self.arms[arm] = rec
+        if results is not None:
+            rec["_results"] = results  # stripped from payload()
+        # every arm's tail lands in the trajectory (lower is better)
+        if rec["dist"].get("n"):
+            self.track(f"{arm}.p99_{unit}", rec["dist"]["p99"],
+                       better="lower")
+        return rec
+
+    def measure(self, arm: str, fn: Callable[[int], object], *,
+                oracle: bool = False, repeats: Optional[int] = None,
+                equiv_to: Optional[str] = None,
+                check: Optional[Callable[[object, object], bool]] = None,
+                meta: Optional[Dict] = None) -> Dict:
+        """Run ``fn(rep)`` ``repeats`` times, wall-timing each repeat.
+
+        ``equiv_to`` names the oracle arm whose per-repeat results this
+        arm must reproduce — ``check(oracle_result, result)`` (default:
+        equality) runs on every repeat, so an arm that drops or
+        duplicates work cannot win on latency.
+        """
+        reps = int(repeats or self.repeats)
+        samples, results = [], []
+        for rep in range(reps):
+            t0 = time.perf_counter()
+            results.append(fn(rep))
+            samples.append(time.perf_counter() - t0)
+        rec = self.add_samples(arm, samples, oracle=oracle, unit="s",
+                               results=results, meta=meta)
+        if equiv_to is not None:
+            want = self.arms[equiv_to].get("_results")
+            if want is None:
+                raise KeyError(f"{equiv_to} has no recorded results")
+            ok = all((check or (lambda a, b: a == b))(w, r)
+                     for w, r in zip(want, results))
+            rec["equiv_to"] = equiv_to
+            rec["equiv_ok"] = bool(ok)
+            if not ok:
+                raise AssertionError(
+                    f"{self.name}/{arm}: result mismatch vs oracle "
+                    f"{equiv_to} — the arm is fast but wrong")
+        return rec
+
+    def _samples(self, arm: str) -> List[float]:
+        return self.arms[arm]["samples"]
+
+    # -- gates -----------------------------------------------------------
+
+    def _add_gate(self, gate: Dict) -> Dict:
+        gate.setdefault("n_boot", self.n_boot)
+        gate.setdefault("alpha", self.alpha)
+        gate.setdefault("seed", self.seed)
+        self.gates.append(gate)
+        better = "lower" if gate["op"] == "<=" else "higher"
+        self.track(f"gate.{gate['gate']}", gate["value"], better=better,
+                   ci=gate.get("ci"))
+        return gate
+
+    def gate_samples(self, name: str, arm: str, op: str, threshold: float,
+                     *, p: float = 50.0) -> Dict:
+        """Gate the percentile-``p`` of one arm's samples against a
+        threshold, bootstrap-CI verdict."""
+        xs = self._samples(arm)
+        ci = bootstrap_ci(xs, pstat(p), n_boot=self.n_boot,
+                          seed=self.seed, alpha=self.alpha)
+        return self._add_gate(dict(
+            gate=name, kind="samples", arm=arm, p=p, op=op,
+            threshold=threshold, value=percentile(xs, p), ci=list(ci),
+            ok=ci_verdict(ci, op, threshold)))
+
+    def gate_ratio(self, name: str, num: str, den: str, op: str,
+                   threshold: float, *, p: float = 50.0) -> Dict:
+        """Gate ``p(num)/p(den)`` (e.g. arm-vs-oracle p99 ratio)."""
+        nx, dx = self._samples(num), self._samples(den)
+        ci = bootstrap_ratio_ci(nx, dx, pstat(p), n_boot=self.n_boot,
+                                seed=self.seed, alpha=self.alpha)
+        d = percentile(dx, p)
+        value = percentile(nx, p) / d if d > 0 else 0.0
+        return self._add_gate(dict(
+            gate=name, kind="ratio", num=num, den=den, p=p, op=op,
+            threshold=threshold, value=value, ci=list(ci),
+            ok=ci_verdict(ci, op, threshold)))
+
+    def gate_tail_ratio(self, arm: str, max_ratio: float, *,
+                        hi: float = 99.0, lo: float = 50.0,
+                        name: Optional[str] = None) -> Dict:
+        """p``hi``/p``lo`` tail-shape gate on one arm's repeat samples."""
+        xs = self._samples(arm)
+
+        def tail(samples):
+            d = percentile(samples, lo)
+            return percentile(samples, hi) / d if d > 0 else 1.0
+
+        ci = bootstrap_ci(xs, tail, n_boot=self.n_boot,
+                          seed=self.seed, alpha=self.alpha)
+        return self._add_gate(dict(
+            gate=name or f"{arm}.tail", kind="tail", arm=arm,
+            hi=hi, lo=lo, op="<=", threshold=max_ratio,
+            value=tail(xs), ci=list(ci),
+            ok=ci_verdict(ci, "<=", max_ratio)))
+
+    def gate_oracle_ratio(self, arm: str, oracle: str, max_ratio: float,
+                          *, p: float = 99.0,
+                          name: Optional[str] = None) -> Dict:
+        """Arm-vs-oracle tail gate: p99(arm)/p99(oracle) <= max_ratio."""
+        return self.gate_ratio(name or f"{arm}.vs_oracle", arm, oracle,
+                               "<=", max_ratio, p=p)
+
+    def gate_speedup(self, arm: str, baseline: str, min_speedup: float,
+                     *, p: float = 50.0,
+                     name: Optional[str] = None) -> Dict:
+        """p50(baseline)/p50(arm) >= min_speedup (times are lower-better,
+        so the baseline is the numerator)."""
+        g = self.gate_ratio(name or f"{arm}.speedup", baseline, arm,
+                            ">=", min_speedup, p=p)
+        return g
+
+    def gate_exact(self, name: str, value: float, op: str,
+                   threshold: float) -> Dict:
+        """Point gate for exact counters (joins, drops, conservation) —
+        quantities with no sampling noise get no CI slack."""
+        value = float(value)
+        ok = value <= threshold if op == "<=" else value >= threshold
+        return self._add_gate(dict(
+            gate=name, kind="exact", op=op, threshold=threshold,
+            value=value, ci=[value, value], ok=bool(ok)))
+
+    # -- output ----------------------------------------------------------
+
+    def track(self, metric: str, value: float, *, better: str = "lower",
+              ci: Optional[Sequence[float]] = None):
+        """Record a trajectory metric CI will diff across commits."""
+        rec = dict(value=float(value), better=better)
+        if ci is not None:
+            rec["ci"] = [float(ci[0]), float(ci[1])]
+        self.trajectory[metric] = rec
+
+    def failed(self) -> List[Dict]:
+        return [g for g in self.gates if not g["ok"]]
+
+    def check(self):
+        """Raise if any gate conclusively failed (CI beyond threshold)."""
+        bad = self.failed()
+        if bad:
+            msgs = [f"{g['gate']}: value={g['value']:.4g} "
+                    f"ci=[{g['ci'][0]:.4g}, {g['ci'][1]:.4g}] "
+                    f"must be {g['op']} {g['threshold']}" for g in bad]
+            raise AssertionError(
+                f"{self.name}: distribution gates failed: {msgs}")
+
+    def payload(self) -> Dict:
+        """The JSON section ``benchmarks.gates dist`` replays: arms with
+        raw samples, evaluated gates (with the bootstrap parameters that
+        make the verdict reproducible), and trajectory metrics."""
+        arms = {}
+        for name, rec in self.arms.items():
+            arms[name] = {k: v for k, v in rec.items()
+                          if k != "_results"}
+        return dict(seed=self.seed, repeats=self.repeats,
+                    n_boot=self.n_boot, alpha=self.alpha,
+                    arms=arms, gates=self.gates,
+                    trajectory=self.trajectory)
+
+
+def replay_gate(gate: Dict, arms: Dict[str, Dict]) -> Dict:
+    """Re-evaluate one stored gate from artifact samples — the CI-side
+    half of the contract: the verdict must be re-derivable from the JSON
+    alone, not trusted from the producer's ``ok`` flag."""
+    kind = gate["kind"]
+    n_boot = gate.get("n_boot", N_BOOT)
+    alpha = gate.get("alpha", ALPHA)
+    seed = gate.get("seed", 0)
+    if kind == "exact":
+        v = float(gate["value"])
+        ok = v <= gate["threshold"] if gate["op"] == "<=" \
+            else v >= gate["threshold"]
+        return dict(gate, ok=bool(ok), ci=[v, v])
+    if kind == "samples":
+        xs = arms[gate["arm"]]["samples"]
+        ci = bootstrap_ci(xs, pstat(gate["p"]), n_boot=n_boot,
+                          seed=seed, alpha=alpha)
+    elif kind == "tail":
+        xs = arms[gate["arm"]]["samples"]
+        lo_p, hi_p = gate["lo"], gate["hi"]
+
+        def tail(samples):
+            d = percentile(samples, lo_p)
+            return percentile(samples, hi_p) / d if d > 0 else 1.0
+
+        ci = bootstrap_ci(xs, tail, n_boot=n_boot, seed=seed, alpha=alpha)
+    elif kind == "ratio":
+        ci = bootstrap_ratio_ci(
+            arms[gate["num"]]["samples"], arms[gate["den"]]["samples"],
+            pstat(gate["p"]), n_boot=n_boot, seed=seed, alpha=alpha)
+    else:
+        raise ValueError(f"unknown gate kind {kind!r}")
+    return dict(gate, ci=list(ci),
+                ok=ci_verdict(ci, gate["op"], gate["threshold"]))

@@ -19,9 +19,15 @@ One benchmark per paper table/figure plus the TPU-side analogues:
                spawn-join telemetry + the DCAFE≤LC join regression gate
   design     — paper §6 DLBC design-choice study
   roofline   — per-cell roofline table from dry-run artifacts (§Roofline)
+
+``--seed N`` / ``--repeats N`` thread a deterministic seed and repeat
+count into every bench that takes them (signature-inspected), and are
+recorded in each saved artifact's envelope so trajectory diffs compare
+like with like.
 """
 
-import sys
+import argparse
+import inspect
 import time
 
 from . import (
@@ -30,6 +36,7 @@ from . import (
     bench_fig13_energy, bench_grain, bench_moe_dispatch, bench_roofline,
     bench_sched, bench_sync_policy, bench_tenants,
 )
+from .common import set_run_context
 
 ALL = {
     "adoption": bench_adoption.run,
@@ -49,13 +56,38 @@ ALL = {
 }
 
 
+def _call(fn, seed, repeats):
+    """Pass seed/repeats through to benches that accept them — several
+    used to hardcode their own repeat counts and seed nothing."""
+    params = inspect.signature(fn).parameters
+    kwargs = {}
+    if seed is not None and "seed" in params:
+        kwargs["seed"] = seed
+    if repeats is not None and "repeats" in params:
+        kwargs["repeats"] = repeats
+    return fn(**kwargs)
+
+
 def main(argv=None):
-    names = (argv or sys.argv[1:]) or list(ALL)
+    ap = argparse.ArgumentParser(
+        description="run registered benchmarks",
+        epilog="names: " + " ".join(ALL))
+    ap.add_argument("names", nargs="*", help="benchmarks to run (all)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="deterministic seed threaded into every bench")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="repeat count for distribution-gated benches")
+    args = ap.parse_args(argv)
+    names = args.names or list(ALL)
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        ap.error(f"unknown benchmarks: {unknown} (have: {' '.join(ALL)})")
+    set_run_context(seed=args.seed, repeats=args.repeats)
     t0 = time.perf_counter()
     for name in names:
         print(f"\n{'=' * 72}\nBENCH {name}\n{'=' * 72}")
         t = time.perf_counter()
-        ALL[name]()
+        _call(ALL[name], args.seed, args.repeats)
         print(f"[{name} done in {time.perf_counter() - t:.1f}s]")
     print(f"\nall benchmarks done in {time.perf_counter() - t0:.1f}s")
 

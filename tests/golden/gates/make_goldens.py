@@ -1,0 +1,210 @@
+"""Regenerate the golden gate artifacts in this directory.
+
+Run from the repo root after an intentional schema change::
+
+    PYTHONPATH=src:. python tests/golden/gates/make_goldens.py
+
+Each gate gets one PASSING and one FAILING artifact; the replay tests
+(``tests/test_bench_gates.py``) assert the verdicts.  The harness
+sections are built with the real :class:`benchmarks.harness.Bench` so
+the goldens can never drift from the producer format silently.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.harness import SCHEMA_VERSION, Bench
+
+HERE = Path(__file__).resolve().parent
+
+
+def envelope(bench, records, harness=None):
+    doc = {"schema_version": SCHEMA_VERSION, "bench": bench,
+           "commit": "golden", "seed": 0, "repeats": 5,
+           "records": records}
+    if harness is not None:
+        doc["harness"] = harness
+    return doc
+
+
+def dump(name, doc):
+    (HERE / name).write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {name}")
+
+
+# -- afe --------------------------------------------------------------------
+
+def afe(joins_dcafe_train):
+    recs = []
+    for surface in ("train_step", "checkpoint"):
+        for policy, joins in (("serial", 0), ("lc", 2),
+                              ("dlbc", 2),
+                              ("dcafe", joins_dcafe_train
+                               if surface == "train_step" else 1)):
+            recs.append(dict(surface=surface, policy=policy, joins=joins,
+                             spawns=8, p50_ms=1.0, p99_ms=2.0))
+    return envelope("adoption", recs)
+
+
+# -- grain ------------------------------------------------------------------
+
+def grain(adaptive_uniform_ms):
+    """grain1 uniform ~0.6ms; a passing adaptive is ~0.1ms (6x), a
+    failing one is ~0.5ms (1.2x: the bootstrap CI excludes 3x)."""
+    walls = {
+        ("uniform", "grain1"): [0.60e-3, 0.62e-3, 0.61e-3, 0.63e-3, 0.60e-3],
+        ("uniform", "coarse"): [0.12e-3, 0.13e-3, 0.12e-3, 0.12e-3, 0.13e-3],
+        ("uniform", "adaptive"): [adaptive_uniform_ms * 1e-3 * f
+                                  for f in (1.0, 1.05, 0.98, 1.02, 1.0)],
+        ("skewed", "grain1"): [21.5e-3, 21.8e-3, 21.6e-3, 21.9e-3, 21.7e-3],
+        ("skewed", "coarse"): [27.9e-3, 28.1e-3, 28.0e-3, 27.8e-3, 28.2e-3],
+        ("skewed", "adaptive"): [21.8e-3, 22.0e-3, 21.9e-3, 22.1e-3, 21.8e-3],
+    }
+    bench = Bench("grain", seed=0)
+    records = []
+    for (dist, arm), ws in walls.items():
+        bench.add_samples(f"{dist}/{arm}", ws, oracle=arm == "grain1")
+        spawns = 260 if arm == "grain1" else 20
+        records.append(dict(
+            dist=dist, arm=arm, attempt=1, reps=5, wall_s=min(ws),
+            wall_samples_s=ws, items_per_s=64 / min(ws),
+            spawns=spawns, joins=5, steals=17 if dist == "skewed" else 0,
+            splits=17 if (dist, arm) == ("skewed", "adaptive") else 0,
+            completions=spawns, errors=0,
+            spawns_per_loop=spawns / 5))
+    bench.gate_speedup("uniform/adaptive", "uniform/grain1", 3.0,
+                       name="uniform_speedup")
+    bench.gate_speedup("skewed/adaptive", "skewed/grain1", 0.9,
+                       name="skew_fraction")
+    bench.gate_exact("spawns_per_loop", 4.0, "<=", 16)
+    bench.gate_exact("skew_steals", 17, ">=", 1)
+    bench.gate_exact("trace_overhead", 0.03, "<=", 0.05)
+    records.append(dict(dist="-", arm="gates", attempt=1,
+                        trace_overhead_frac=0.03))
+    return envelope("grain", records, bench.payload())
+
+
+# -- ep ---------------------------------------------------------------------
+
+def ep(joins):
+    recs = []
+    for router, dropped in (("balanced", 0), ("hot", 6)):
+        recs.append(dict(arm="dp", role="oracle", router=router,
+                         capacity_factor=1.0, ms=1.0, spawns=510,
+                         joins=1, rounds=1, dropped_frac=0.0))
+        recs.append(dict(arm="ep", role="candidate", router=router,
+                         capacity_factor=1.0, ms=2.0, spawns=512,
+                         joins=joins, rounds=1, sent=512, received=512,
+                         dropped=dropped, dropped_frac=dropped / 512))
+    return envelope("ep", recs)
+
+
+# -- tenants ----------------------------------------------------------------
+
+def tenants(global_spawns, iso_ratios):
+    bench = Bench("tenants", seed=0)
+    bench.add_samples("solo", [3.0] * 5, unit="steps", oracle=True)
+    bench.add_samples("weighted", [7.0] * 5, unit="steps")
+    bench.add_samples("fifo", [47.0] * 5, unit="steps")
+    bench.add_samples("isolation_ratio", iso_ratios, unit="ratio")
+    bench.gate_samples("isolation", "isolation_ratio", "<=", 1.0, p=50)
+    recs = []
+    for rep in range(5):
+        for scenario in ("solo", "fifo", "weighted"):
+            tenants_ctr = ({"steady": dict(spawns=50, joins=50)}
+                           if scenario == "solo" else
+                           {} if scenario == "fifo" else
+                           {"steady": dict(spawns=50, joins=50),
+                            "bursty": dict(spawns=48, joins=48)})
+            total = sum(t["spawns"] for t in tenants_ctr.values()) or 98
+            recs.append(dict(
+                scenario=scenario, repeat=rep, steady_p99=7.0,
+                sched=dict(spawns=global_spawns if scenario == "weighted"
+                           else total,
+                           joins=global_spawns if scenario == "weighted"
+                           else total,
+                           tenants=tenants_ctr)))
+    return envelope("tenants", recs, bench.payload())
+
+
+# -- dist -------------------------------------------------------------------
+
+def dist(samples, lie=False):
+    bench = Bench("sched", seed=0)
+    bench.add_samples("uniform/dlbc", samples)
+    bench.gate_tail_ratio("uniform/dlbc", 2.0)
+    # the p50 gate is what flips between pass and fail: the fail
+    # variant's samples sit entirely above 2.0, so the bootstrap CI
+    # conclusively excludes the threshold (a tail-only fail would be
+    # inconclusive: resamples omitting the outlier straddle)
+    bench.gate_samples("uniform_p50", "uniform/dlbc", "<=", 2.0, p=50)
+    payload = bench.payload()
+    if lie:  # producer wrote ok=true over a failing CI (tamper check)
+        for g in payload["gates"]:
+            g["ok"] = True
+    return envelope("sched", [], payload)
+
+
+# -- trace ------------------------------------------------------------------
+
+def trace(spawns_in_telemetry):
+    events = [
+        {"name": "spawn", "cat": "ws", "ph": "i", "ts": 1.0, "pid": 0,
+         "tid": 1, "s": "t", "args": {"n": 5}},
+        {"name": "join", "cat": "scope", "ph": "i", "ts": 2.0, "pid": 0,
+         "tid": 1, "s": "t", "args": {"n": 1}},
+        {"name": "complete", "cat": "ws", "ph": "i", "ts": 3.0, "pid": 0,
+         "tid": 1, "s": "t", "args": {"n": 5}},
+        {"name": "task", "cat": "worker", "ph": "X", "ts": 1.0,
+         "dur": 100.0, "pid": 0, "tid": 1, "args": {"n": 1}},
+    ]
+    telemetry = dict(spawns=spawns_in_telemetry, joins=1, steals=0,
+                     splits=0, completions=5, errors=0)
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "telemetry": telemetry}
+
+
+def main():
+    dump("afe_pass.json", afe(joins_dcafe_train=1))
+    dump("afe_fail.json", afe(joins_dcafe_train=3))
+    dump("grain_pass.json", grain(adaptive_uniform_ms=0.10))
+    dump("grain_fail.json", grain(adaptive_uniform_ms=0.50))
+    dump("ep_pass.json", ep(joins=1))
+    dump("ep_fail.json", ep(joins=2))
+    dump("tenants_pass.json",
+         tenants(global_spawns=98, iso_ratios=[0.4] * 5))
+    dump("tenants_fail.json",
+         tenants(global_spawns=99, iso_ratios=[0.4] * 5))
+    dump("dist_pass.json", dist([1.0, 1.1, 1.05, 0.95, 1.02]))
+    dump("dist_fail.json", dist([5.0, 5.1, 5.05, 4.95, 5.02], lie=True))
+    (HERE / "trace_pass" / "trace").mkdir(parents=True, exist_ok=True)
+    (HERE / "trace_fail" / "trace").mkdir(parents=True, exist_ok=True)
+    (HERE / "trace_pass" / "trace" / "mini.trace.json").write_text(
+        json.dumps(trace(spawns_in_telemetry=5), indent=1) + "\n")
+    (HERE / "trace_fail" / "trace" / "mini.trace.json").write_text(
+        json.dumps(trace(spawns_in_telemetry=6), indent=1) + "\n")
+    print("wrote trace_pass/ trace_fail/")
+    # trajectory pair: current regresses sched p99 by 12% over previous
+    prev = {"schema_version": SCHEMA_VERSION, "commit": "prev",
+            "surfaces": {
+                "sched/skewed/dlbc.p99_s": {"value": 0.170,
+                                            "better": "lower"},
+                "grain/gate.uniform_speedup": {"value": 6.0,
+                                               "better": "higher"},
+            }}
+    cur = {"schema_version": SCHEMA_VERSION, "commit": "cur",
+           "surfaces": {
+               "sched/skewed/dlbc.p99_s": {
+                   "value": 0.1904, "better": "lower",
+                   "ci": [0.189, 0.192]},
+               "grain/gate.uniform_speedup": {"value": 6.1,
+                                              "better": "higher"},
+           }}
+    dump("trajectory_prev.json", prev)
+    dump("trajectory_regressed.json", cur)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,265 @@
+"""Unit tests for the oracle-first, distribution-gated bench harness:
+the stats layer (exact percentiles, LogHistogram bucket-edge
+semantics, bootstrap CIs) and the Bench arm/gate/trajectory contract
+that benchmarks.gates replays from artifacts."""
+
+import math
+
+import pytest
+
+from benchmarks.common import dist_stats
+from benchmarks.harness import (
+    ALPHA,
+    N_BOOT,
+    Bench,
+    bootstrap_ci,
+    bootstrap_ratio_ci,
+    ci_verdict,
+    pstat,
+    replay_gate,
+    sample_dist,
+)
+from repro.sched.telemetry import HIST_BASE_S, LogHistogram, percentile
+
+
+# ---------------------------------------------------------------------------
+# exact percentiles
+# ---------------------------------------------------------------------------
+
+def test_percentile_empty_and_single():
+    assert percentile([], 50) == 0.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 99) == 7.0
+
+
+def test_percentile_interpolates():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    # k = 3 * 0.99 = 2.97 -> between s[2] and s[3]
+    assert percentile(xs, 99) == pytest.approx(3.97)
+
+
+# ---------------------------------------------------------------------------
+# LogHistogram upper-edge semantics
+# ---------------------------------------------------------------------------
+
+def test_loghist_empty_percentile_is_zero():
+    assert LogHistogram().percentile(50) == 0.0
+
+
+def test_loghist_single_sample_clips_edge_to_max():
+    # 1.5 ms lands in the (1.024, 2.048] ms bucket; the percentile is
+    # the bucket's upper edge clipped to the observed max -> exactly
+    # the sample, not the 2.048 ms edge.
+    h = LogHistogram()
+    h.add(1.5e-3)
+    k = LogHistogram.bucket_of(1.5e-3)
+    assert LogHistogram.bucket_edge_s(k) == pytest.approx(2.048e-3)
+    assert h.percentile(50) == pytest.approx(1.5e-3)
+    assert h.percentile(99) == pytest.approx(1.5e-3)
+
+
+def test_loghist_percentile_is_upper_edge_between_samples():
+    # two samples two buckets apart: p50 reports the lower sample's
+    # bucket UPPER edge (a <=2x consistent overestimate), p99 clips to
+    # the max sample
+    h = LogHistogram().extend([1.0e-3, 4.0e-3])
+    k_lo = LogHistogram.bucket_of(1.0e-3)
+    assert h.percentile(50) == pytest.approx(
+        LogHistogram.bucket_edge_s(k_lo))  # 1.024 ms edge, < max
+    assert h.percentile(99) == pytest.approx(4.0e-3)
+
+
+def test_loghist_bucket_geometry():
+    # at or below the base lands in bucket 0; each bucket doubles
+    assert LogHistogram.bucket_of(HIST_BASE_S) == 0
+    assert LogHistogram.bucket_of(HIST_BASE_S * 2) == 1
+    assert LogHistogram.bucket_of(HIST_BASE_S * 2.01) == 2
+
+
+def test_loghist_merge_equals_extend():
+    a = LogHistogram().extend([1e-3, 2e-3])
+    b = LogHistogram().extend([4e-3, 8e-3])
+    merged = a.merge(b)
+    whole = LogHistogram().extend([1e-3, 2e-3, 4e-3, 8e-3])
+    assert merged.counts == whole.counts
+    assert merged.n == whole.n == 4
+    assert merged.max == whole.max
+
+
+def test_dist_stats_uses_histogram_bucketing():
+    s = dist_stats([1.5e-3])
+    assert s["n"] == 1
+    assert s["p50_ms"] == pytest.approx(1.5)
+    assert s["tail_p99_p50"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# bootstrap CIs
+# ---------------------------------------------------------------------------
+
+def test_bootstrap_ci_deterministic_for_seed():
+    xs = [1.0, 1.2, 0.9, 1.1, 1.05]
+    a = bootstrap_ci(xs, pstat(50), seed=3)
+    b = bootstrap_ci(xs, pstat(50), seed=3)
+    c = bootstrap_ci(xs, pstat(50), seed=4)
+    assert a == b
+    assert a != c  # different seed, different resamples
+
+
+def test_bootstrap_ci_degenerate_inputs():
+    assert bootstrap_ci([], pstat(50)) == (0.0, 0.0)
+    assert bootstrap_ci([5.0], pstat(50)) == (5.0, 5.0)
+    # constant samples: every resample is identical
+    assert bootstrap_ci([2.0] * 8, pstat(99)) == (2.0, 2.0)
+
+
+def test_bootstrap_ci_covers_true_median_on_synthetic_dist():
+    # symmetric synthetic distribution with known median 10.0: the 90%
+    # CI of the bootstrap median must contain it, and must be bounded
+    # by the sample range
+    xs = [8.0, 9.0, 9.5, 10.0, 10.5, 11.0, 12.0]
+    lo, hi = bootstrap_ci(xs, pstat(50), seed=0)
+    assert lo <= 10.0 <= hi
+    assert min(xs) <= lo <= hi <= max(xs)
+
+
+def test_bootstrap_ci_shifts_with_the_distribution():
+    # a real 2x shift moves the whole interval past the old one
+    base = [1.0, 1.05, 0.95, 1.02, 0.98]
+    shifted = [2.0 * x for x in base]
+    _, hi_base = bootstrap_ci(base, pstat(50), seed=0)
+    lo_shift, _ = bootstrap_ci(shifted, pstat(50), seed=0)
+    assert lo_shift > hi_base
+
+
+def test_bootstrap_ratio_ci_constant_arms_exact():
+    lo, hi = bootstrap_ratio_ci([3.0] * 5, [1.5] * 5, pstat(50))
+    assert lo == pytest.approx(2.0)
+    assert hi == pytest.approx(2.0)
+
+
+def test_bootstrap_ratio_ci_empty_arm():
+    assert bootstrap_ratio_ci([], [1.0], pstat(50)) == (0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# gate verdict semantics
+# ---------------------------------------------------------------------------
+
+def test_ci_verdict_straddle_is_inconclusive_pass():
+    assert ci_verdict((0.9, 1.1), "<=", 1.0)   # straddles -> pass
+    assert ci_verdict((0.9, 1.1), ">=", 1.0)   # straddles -> pass
+
+
+def test_ci_verdict_fails_only_on_exclusion():
+    assert not ci_verdict((1.2, 1.4), "<=", 1.0)  # whole CI above
+    assert ci_verdict((0.5, 0.9), "<=", 1.0)
+    assert not ci_verdict((0.5, 0.9), ">=", 1.0)  # whole CI below
+    assert ci_verdict((1.2, 1.4), ">=", 1.0)
+    # the threshold itself is on the passing side of both ops
+    assert ci_verdict((1.0, 1.0), "<=", 1.0)
+    assert ci_verdict((1.0, 1.0), ">=", 1.0)
+
+
+def test_ci_verdict_unknown_op():
+    with pytest.raises(ValueError):
+        ci_verdict((0.0, 1.0), "==", 1.0)
+
+
+# ---------------------------------------------------------------------------
+# sample_dist
+# ---------------------------------------------------------------------------
+
+def test_sample_dist_seconds_includes_histogram():
+    d = sample_dist([1e-3, 2e-3, 4e-3], unit="s")
+    assert d["n"] == 3
+    assert d["latency_hist"]["n"] == 3
+    assert d["p50"] == pytest.approx(2e-3)
+    assert d["tail_p99_p50"] >= 1.0
+
+
+def test_sample_dist_other_units_skip_histogram():
+    d = sample_dist([1.0, 2.0], unit="steps")
+    assert "latency_hist" not in d
+    assert d["unit"] == "steps"
+    assert sample_dist([], unit="ratio") == {"n": 0, "unit": "ratio"}
+
+
+# ---------------------------------------------------------------------------
+# Bench: arms, oracle equivalence, gates, payload replay
+# ---------------------------------------------------------------------------
+
+def test_bench_measure_checks_oracle_equivalence():
+    bench = Bench("t", seed=0, repeats=3)
+    bench.measure("serial", lambda rep: [1, 2, 3], oracle=True)
+    rec = bench.measure("fast", lambda rep: [1, 2, 3],
+                        equiv_to="serial")
+    assert rec["equiv_ok"] is True
+    with pytest.raises(AssertionError, match="fast but wrong"):
+        bench.measure("broken", lambda rep: [1, 2],  # dropped an item
+                      equiv_to="serial")
+
+
+def test_bench_measure_custom_check():
+    bench = Bench("t", seed=0, repeats=2)
+    bench.measure("serial", lambda rep: 100.0, oracle=True)
+    rec = bench.measure("approx", lambda rep: 100.0 + 1e-9,
+                        equiv_to="serial",
+                        check=lambda a, b: math.isclose(a, b))
+    assert rec["equiv_ok"] is True
+
+
+def test_bench_gate_exact_and_check():
+    bench = Bench("t", seed=0)
+    g = bench.gate_exact("joins", 1, "<=", 1)
+    assert g["ok"] and g["ci"] == [1.0, 1.0]
+    bench.gate_exact("drops", 3, "<=", 0)
+    assert [g["gate"] for g in bench.failed()] == ["drops"]
+    with pytest.raises(AssertionError, match="drops"):
+        bench.check()
+
+
+def test_bench_gate_speedup_and_tail():
+    bench = Bench("t", seed=0)
+    bench.add_samples("serial", [2.0] * 5, oracle=True)
+    bench.add_samples("par", [1.0] * 5)
+    g = bench.gate_speedup("par", "serial", 1.5)
+    assert g["ok"] and g["value"] == pytest.approx(2.0)
+    t = bench.gate_tail_ratio("par", 3.0)
+    assert t["ok"] and t["value"] == pytest.approx(1.0)
+
+
+def test_bench_payload_strips_results_and_tracks_trajectory():
+    bench = Bench("t", seed=7, repeats=2)
+    bench.measure("a", lambda rep: [rep], oracle=True)
+    p = bench.payload()
+    assert p["seed"] == 7 and p["repeats"] == 2
+    assert p["n_boot"] == N_BOOT and p["alpha"] == ALPHA
+    assert "_results" not in p["arms"]["a"]
+    assert p["arms"]["a"]["samples"]  # raw samples survive for replay
+    assert "a.p99_s" in p["trajectory"]
+    assert p["trajectory"]["a.p99_s"]["better"] == "lower"
+
+
+def test_replay_gate_matches_producer_verdict():
+    # the round-trip contract: replaying a stored gate from the
+    # artifact's raw samples reproduces the producer's CI exactly
+    bench = Bench("t", seed=5)
+    bench.add_samples("serial", [2.0, 2.1, 1.9, 2.05, 1.95], oracle=True)
+    bench.add_samples("par", [1.0, 1.1, 0.9, 1.05, 0.95])
+    bench.gate_speedup("par", "serial", 1.5)
+    bench.gate_tail_ratio("par", 3.0)
+    bench.gate_samples("par_p50", "par", "<=", 2.0)
+    payload = bench.payload()
+    for stored in payload["gates"]:
+        replayed = replay_gate(stored, payload["arms"])
+        assert replayed["ok"] == stored["ok"]
+        assert replayed["ci"] == pytest.approx(stored["ci"])
+
+
+def test_replay_gate_unknown_kind():
+    with pytest.raises(ValueError):
+        replay_gate({"kind": "mystery"}, {})
