@@ -28,6 +28,25 @@ flaky-runner hazard the harness exists to kill).  CI replays the same
 verdict from ``tenants.json`` via ``python -m benchmarks.gates
 tenants``.  Telemetry conservation (per-tenant spawns/joins sum to the
 globals) stays an exact per-repeat assert: counters carry no noise.
+
+Long-prompt adversary (the chunked-prefill SLO surface): a second
+scenario triple where an *adversary* tenant submits long prompts
+(~``ADV_PROMPT_LEN`` tokens, ``max_new=2``) into the steady trickle.
+The judged metric is the steady tenant's per-token decode-step cost p99
+(``ServeStats.p99_decode_cost`` — vtime units where one decode = 1 and
+a prefill chunk of ``c`` tokens = ``c``):
+
+* ``adv_solo``    — steady alone (oracle: its unloaded decode cost);
+* ``adv_whole``   — adversary prefills whole-prompt in its placement
+                    step (the pre-DLBC behaviour: every co-resident
+                    decode that step stalls for the full prompt);
+* ``adv_chunked`` — adversary prefill is DLBC-chunked at
+                    ``ADV_PREFILL_CHUNK`` and interleaved with decode.
+
+Gates (bootstrap CI over per-repeat ratios): chunked steady decode p99
+≤ solo p99 + one prefill-chunk service time, and whole-prompt p99 /
+chunked p99 ≥ ``CHUNKING_GAIN_MIN`` (chunking must actually buy the
+tail back, not just not hurt).
 """
 
 from __future__ import annotations
@@ -52,6 +71,15 @@ SLACK_STEPS = 4
 ISOLATION_RATIO_MAX = 1.0   # p99_weighted / bound
 WEIGHTED_VS_FIFO_MAX = 1.0  # weighted must not serve steady worse
 
+# -- long-prompt adversary (chunked-prefill SLO surface) -------------------
+ADV_PROMPT_LEN = 48         # adversary prompt length (tokens)
+ADV_MAX_NEW = 2             # adversary is prefill-heavy, decode-light
+ADV_EVERY = 12              # steps between adversary arrivals
+ADV_PREFILL_CHUNK = 8       # DLBC chunk cap in the adversary arms
+ADV_CACHE_LEN = 64          # adversary prompts need the deeper cache
+PREFILL_ISOLATION_MAX = 1.0  # chunked p99 / (solo p99 + chunk) bound
+CHUNKING_GAIN_MIN = 1.5     # whole p99 / chunked p99 must exceed this
+
 
 def _cfg():
     return ModelConfig(name="bench-tenants", family="dense", n_layers=2,
@@ -73,6 +101,81 @@ def make_traces(steps: int, rng):
                 max_new=BURSTY_MAX_NEW, arrive_step=start, tenant="bursty"))
             rid += 1
     return steady, bursty
+
+
+def make_adversary_trace(steps: int, rng):
+    """Long-prompt, short-decode requests arriving every ADV_EVERY steps."""
+    return [Request(rid=20_000 + j,
+                    prompt=list(rng.integers(0, 1024,
+                                             size=ADV_PROMPT_LEN)),
+                    max_new=ADV_MAX_NEW, arrive_step=start,
+                    tenant="adversary")
+            for j, start in enumerate(range(0, steps, ADV_EVERY))]
+
+
+def _run_adversary_repeat(cfg, params, steps, slots, weights, seed):
+    """Steady decode-cost p99 under a long-prompt adversary: solo vs
+    whole-prompt prefill vs DLBC-chunked prefill.  Returns the
+    per-scenario records and ``{scenario: steady p99_decode_cost}``."""
+    w_steady, w_adv = weights
+    max_steps = steps * 20
+
+    def fresh(mode, tenants):
+        return ContinuousBatcher(cfg, params, n_slots=slots,
+                                 cache_len=ADV_CACHE_LEN, policy="wdlbc",
+                                 tenants=tenants,
+                                 prefill_chunk=ADV_PREFILL_CHUNK,
+                                 prefill_mode=mode)
+
+    def traces():
+        rng = np.random.default_rng(seed)
+        steady, _ = make_traces(steps, rng)
+        return steady, make_adversary_trace(steps, rng)
+
+    scenarios = {}
+    steady, _ = traces()
+    b = fresh("chunked", tenants={"steady": w_steady})
+    b.run(steady, max_steps=max_steps)
+    scenarios["adv_solo"] = b
+
+    for name, mode in (("adv_whole", "whole"), ("adv_chunked", "chunked")):
+        steady, adversary = traces()
+        b = fresh(mode, tenants={"steady": w_steady, "adversary": w_adv})
+        b.run(steady + adversary, max_steps=max_steps)
+        scenarios[name] = b
+
+    records, cost_p99s = [], {}
+    for name, batcher in scenarios.items():
+        tstats = {t: s.summary() for t, s in batcher.tenant_stats.items()}
+        sched = batcher.sched.telemetry.summary()
+        cost_p99s[name] = float(tstats["steady"]["p99_decode_cost"])
+        records.append(dict(
+            scenario=name, policy=batcher.policy, seed=seed,
+            steps=batcher.stats.steps,
+            utilization=batcher.stats.utilization,
+            steady_p99_decode_cost=cost_p99s[name],
+            prefill_mode=batcher.prefill_mode,
+            prefill_chunk=ADV_PREFILL_CHUNK,
+            role="oracle" if name == "adv_solo" else "candidate",
+            sched=sched, tenant_stats=tstats,
+            weights=dict(steady=w_steady, adversary=w_adv)))
+
+        # -- exact conservation, asserted on every repeat ----------------
+        tele = batcher.sched.telemetry
+        totals = tele.tenant_totals()
+        assert totals["spawns"] == tele.spawns == tele.joins, \
+            (name, "quiescence: every admitted request completed")
+        # AFE: joins count requests, never prefill chunks
+        assert tele.joins == len(batcher.stats.latencies), \
+            (name, tele.joins, len(batcher.stats.latencies))
+        assert sched["prefill_tokens"] > 0, (name, "prefill ran")
+
+    # chunked and whole arms prefill the SAME token work — only the
+    # schedule differs
+    by = {r["scenario"]: r for r in records}
+    assert (by["adv_chunked"]["sched"]["prefill_tokens"]
+            == by["adv_whole"]["sched"]["prefill_tokens"])
+    return records, cost_p99s
 
 
 def _run_repeat(cfg, params, steps, slots, weights, seed):
@@ -150,41 +253,76 @@ def run(steps: int = 200, slots: int = 4, weights=(3.0, 1.0),
 
     all_records, p99s = [], {"solo": [], "fifo": [], "weighted": []}
     iso_ratios, fifo_ratios, bounds = [], [], []
+    costs = {"adv_solo": [], "adv_whole": [], "adv_chunked": []}
+    prefill_iso_ratios, chunk_gain_ratios = [], []
     for rep in range(repeats):
         records, steady_p99 = _run_repeat(cfg, params, steps, slots,
                                           weights, seed + rep)
-        for r in records:
+        adv_records, cost_p99 = _run_adversary_repeat(
+            cfg, params, steps, slots, weights, seed + rep)
+        for r in records + adv_records:
             r["repeat"] = rep
-        all_records.extend(records)
+        all_records.extend(records + adv_records)
         for name in p99s:
             p99s[name].append(steady_p99[name])
+        for name in costs:
+            costs[name].append(cost_p99[name])
         bound = steady_p99["solo"] / share + BURSTY_MAX_NEW + SLACK_STEPS
         bounds.append(bound)
         iso_ratios.append(steady_p99["weighted"] / bound)
         fifo_ratios.append(
             steady_p99["weighted"] / steady_p99["fifo"]
             if steady_p99["fifo"] > 0 else 0.0)
+        # one prefill chunk is the most extra vtime any decode step can
+        # absorb under chunking — the SLO bound the tentpole exists for
+        cost_bound = cost_p99["adv_solo"] + ADV_PREFILL_CHUNK
+        prefill_iso_ratios.append(cost_p99["adv_chunked"] / cost_bound)
+        chunk_gain_ratios.append(
+            cost_p99["adv_whole"] / cost_p99["adv_chunked"]
+            if cost_p99["adv_chunked"] > 0 else 0.0)
 
     for name, samples in p99s.items():
         bench.add_samples(name, samples, unit="steps",
                           oracle=name == "solo")
     bench.add_samples("isolation_ratio", iso_ratios, unit="ratio")
     bench.add_samples("weighted_vs_fifo", fifo_ratios, unit="ratio")
+    for name, samples in costs.items():
+        bench.add_samples(name, samples, unit="tokens",
+                          oracle=name == "adv_solo")
+    bench.add_samples("prefill_isolation_ratio", prefill_iso_ratios,
+                      unit="ratio")
+    bench.add_samples("prefill_chunking_gain", chunk_gain_ratios,
+                      unit="ratio")
     bench.gate_samples("isolation", "isolation_ratio", "<=",
                        ISOLATION_RATIO_MAX, p=50)
     bench.gate_samples("weighted_vs_fifo", "weighted_vs_fifo", "<=",
                        WEIGHTED_VS_FIFO_MAX, p=50)
+    # the acceptance bound: steady decode p99 under a chunked adversary
+    # stays within solo p99 + one prefill-chunk service time
+    bench.gate_samples("prefill_isolation", "prefill_isolation_ratio",
+                       "<=", PREFILL_ISOLATION_MAX, p=50)
+    bench.gate_samples("prefill_chunking_gain", "prefill_chunking_gain",
+                       ">=", CHUNKING_GAIN_MIN, p=50)
 
     rows = []
     for name in ("solo", "fifo", "weighted"):
         d = bench.arms[name]["dist"]
         rows.append([name, f"{d['p50']:.1f}", f"{d['p99']:.1f}",
                      f"{d['max']:.1f}", d["n"]])
+    for name in ("adv_solo", "adv_whole", "adv_chunked"):
+        d = bench.arms[name]["dist"]
+        rows.append([f"{name} (cost)", f"{d['p50']:.1f}",
+                     f"{d['p99']:.1f}", f"{d['max']:.1f}", d["n"]])
     print(f"isolation: steady p99 solo={np.median(p99s['solo']):.1f} "
           f"weighted={np.median(p99s['weighted']):.1f} "
           f"fifo={np.median(p99s['fifo']):.1f} "
           f"bound~{np.median(bounds):.1f} (share={share:.2f}, "
           f"{repeats} repeats)")
+    print(f"prefill: steady decode-cost p99 solo="
+          f"{np.median(costs['adv_solo']):.1f} "
+          f"whole={np.median(costs['adv_whole']):.1f} "
+          f"chunked={np.median(costs['adv_chunked']):.1f} "
+          f"(chunk={ADV_PREFILL_CHUNK}, prompt={ADV_PROMPT_LEN})")
     for g in bench.gates:
         print(f"gate {g['gate']}: value={g['value']:.3f} "
               f"ci=[{g['ci'][0]:.3f}, {g['ci'][1]:.3f}] "

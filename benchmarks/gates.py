@@ -9,6 +9,7 @@ tested outside CI)::
     python -m benchmarks.gates grain      experiments/bench/grain.json
     python -m benchmarks.gates ep         experiments/bench/ep.json
     python -m benchmarks.gates tenants    experiments/bench/tenants.json
+    python -m benchmarks.gates serve      experiments/bench/batcher.json
     python -m benchmarks.gates trace      experiments/bench
     python -m benchmarks.gates dist       experiments/bench/sched.json
     python -m benchmarks.gates trajectory experiments/bench \\
@@ -125,7 +126,8 @@ def gate_ep(path) -> list:
     router drops zero pairs at capacity_factor >= 1.0."""
     if _skip(path):
         return []
-    recs = [r for r in load_records(path) if r.get("arm") == "ep"]
+    env = load_envelope(path)
+    recs = [r for r in env["records"] if r.get("arm") == "ep"]
     bad = []
     for r in recs:
         print(f"ep/{r['router']}: joins={r['joins']} "
@@ -144,6 +146,9 @@ def gate_ep(path) -> list:
                        "pairs (exchange plan must reassign)")
     if not recs:
         bad.append("no ep records in artifact")
+    replayed = _replay_harness(env, label="ep")
+    if replayed:  # None = pre-harness artifact: counters above suffice
+        bad.extend(replayed)
     return bad
 
 
@@ -208,6 +213,52 @@ def gate_tenants(path) -> list:
             bad.append(f"{rec['scenario']}: spawns != joins")
     replayed = _replay_harness(env, label="tenants")
     if replayed:
+        bad.extend(replayed)
+    return bad
+
+
+def gate_serve(path) -> list:
+    """Serving SLO surfaces from ``batcher.json``: telemetry joins must
+    count completed REQUESTS (never prefill chunks — the AFE contract),
+    chunked prefill must actually have run when prefill work existed,
+    and the stored harness gates (chunked==whole max |Δ| == 0.0, DLBC
+    p99 <= LC, decode-cost cap) replay from the raw samples."""
+    if _skip(path):
+        return []
+    env = load_envelope(path)
+    bad = []
+    for rec in env["records"]:
+        sched = rec.get("sched")
+        if sched is None:
+            continue
+        tag = f"{rec.get('policy')}/rep{rec.get('repeat')}"
+        print(f"{tag}: spawns={sched['spawns']} joins={sched['joins']} "
+              f"done={rec['n_done']} prefill_chunks="
+              f"{sched.get('prefill_chunks')} prefill_tokens="
+              f"{sched.get('prefill_tokens')}")
+        if not (sched["spawns"] == sched["joins"] == rec["n_done"]):
+            bad.append(f"{tag}: joins != completed requests "
+                       "(AFE regressed: chunks are being joined, or "
+                       "requests leaked)")
+        if "truncated" in rec and rec["truncated"] is None:
+            bad.append(f"{tag}: truncated not recorded")
+        if "truncated" not in rec:
+            bad.append(f"{tag}: no truncated counter in record")
+        if (sched.get("prefill_tokens", 0) > 0
+                and sched.get("prefill_chunks", 0) < 1):
+            bad.append(f"{tag}: prefill tokens written without chunks "
+                       "(counter conservation broken)")
+        if (sched.get("prefill_chunks", 0) > 0
+                and sched.get("prefill_tokens", 0)
+                < sched.get("prefill_chunks", 0)):
+            bad.append(f"{tag}: fewer prefill tokens than chunks")
+    if not env["records"]:
+        bad.append("no serving records in artifact")
+    replayed = _replay_harness(env, label="serve")
+    if replayed is None:
+        bad.append("no harness section — bench_batcher did not emit "
+                   "distribution gates")
+    else:
         bad.extend(replayed)
     return bad
 
@@ -360,6 +411,7 @@ GATES = {
     "ep": gate_ep,
     "trace": gate_trace,
     "tenants": gate_tenants,
+    "serve": gate_serve,
     "dist": gate_dist,
 }
 

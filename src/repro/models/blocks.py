@@ -188,3 +188,31 @@ def layer_decode_apply(p: dict, cfg, x: jnp.ndarray, cache: dict,
     else:
         f = L.mlp_apply(p["mlp"], h, cfg.act)
     return x + f, new_cache
+
+
+def layer_prefill_apply(p: dict, cfg, x: jnp.ndarray, cache: dict,
+                        cache_index, count, kind: str):
+    """One block over a ``(B, C)`` token span (chunked prefill).
+    Returns ``(x, new_cache)``.
+
+    Only full-cache attention families are supported: recurrent state
+    (ssm/hybrid) is not position-indexed, and ring-buffer
+    (sliding-window) caches would need modular span writes.  The
+    batcher rejects those configs at ``submit()``.
+    """
+    if kind not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"span prefill is only defined for dense/moe blocks, "
+            f"not kind={kind!r}")
+    new_cache = dict(cache)
+    h = L.norm_apply(p["ln1"], x, cfg.norm)
+    a, kc, vc = L.attn_prefill_apply(p["attn"], cfg, h, cache,
+                                     cache_index, count)
+    new_cache["k"], new_cache["v"] = kc, vc
+    x = x + a
+    h = L.norm_apply(p["ln2"], x, cfg.norm)
+    if kind == "moe":
+        f = M.moe_apply(p["moe"], cfg, h)
+    else:
+        f = L.mlp_apply(p["mlp"], h, cfg.act)
+    return x + f, new_cache

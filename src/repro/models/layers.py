@@ -487,6 +487,93 @@ def kv_cache_update(cache_arr: jnp.ndarray, new: jnp.ndarray,
         new[:, 0].astype(cache_arr.dtype))
 
 
+def kv_cache_update_span(cache_arr: jnp.ndarray, new: jnp.ndarray,
+                         idx: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:
+    """Write a K/V span ``new`` (B, C, KV, h) into the cache starting at
+    per-row indices ``idx`` (B,) — the multi-token generalisation of
+    :func:`kv_cache_update` for chunked prefill.
+
+    Only the first ``count[b]`` lanes of row b are written: padding
+    lanes (and any lane that would land past the cache end) are routed
+    to index ``T`` and DROPPED by the scatter, so a masked row's cache
+    is untouched bit-for-bit.  That drop is what isolates a prefilling
+    slot's padded launch buffer from its neighbours in the batch."""
+    B, T = cache_arr.shape[0], cache_arr.shape[1]
+    C = new.shape[1]
+    idx = jnp.asarray(idx, jnp.int32)
+    tgt = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # (B, C)
+    valid = (jnp.arange(C)[None, :] < count[:, None]) & (tgt < T)
+    tgt = jnp.where(valid, tgt, T)  # T is out of bounds -> dropped
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    return cache_arr.at[rows, tgt].set(new.astype(cache_arr.dtype),
+                                       mode="drop")
+
+
+def prefill_attention(
+    q: jnp.ndarray,        # (B, C, H, dh)
+    k_cache: jnp.ndarray,  # (B, T, KV, dh)
+    v_cache: jnp.ndarray,
+    cache_index: jnp.ndarray,  # (B,) absolute position of q[:, 0]
+) -> jnp.ndarray:
+    """Causal attention of a C-token span against the full KV cache.
+
+    Query ``j`` of row ``b`` sits at absolute position
+    ``cache_index[b] + j`` and sees every cache position ``<=`` its own
+    — which, with the span's own K/V already written, is exactly the
+    full-softmax semantics of :func:`decode_attention` applied per lane.
+    Because each query's scores reduce over the same (dh, T) axes
+    regardless of where the chunk boundary falls, the outputs are
+    BITWISE identical across chunkings of the same prompt (the chunked
+    == whole-prompt exactness the serving tests pin).
+
+    Padded lanes (callers mask them via the span write's ``count``)
+    produce garbage that callers must never read; their KV writes are
+    dropped and their logits are never consumed.
+    """
+    B, C, H, dh = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, C, KV, G, dh)
+    s = jnp.einsum("bckgd,btkd->bckgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    ci = jnp.asarray(cache_index, jnp.int32)
+    qpos = ci[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # (B, C)
+    mask = jnp.arange(T)[None, None, :] <= qpos[..., None]         # (B, C, T)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bckgt,btkd->bckgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, dh).astype(q.dtype)
+
+
+def attn_prefill_apply(p: dict, cfg, x: jnp.ndarray, cache: dict,
+                       cache_index, count) -> tuple:
+    """Span prefill: project a (B, C, d) chunk, write its K/V at per-row
+    cache indices (``count`` masks each row's valid lanes), attend
+    causally over the cache.  Returns ``(out, k_cache, v_cache)``.
+
+    RoPE is applied at the absolute positions ``cache_index + lane``,
+    so a chunk boundary never shifts a token's rotary phase."""
+    B, C, d = x.shape
+    H, KV, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense_apply(p["wq"], x).reshape(B, C, H, h)
+    k = dense_apply(p["wk"], x).reshape(B, C, KV, h)
+    v = dense_apply(p["wv"], x).reshape(B, C, KV, h)
+    ci = jnp.asarray(cache_index, jnp.int32)
+    if ci.ndim == 0:
+        ci = jnp.full((B,), ci, jnp.int32)
+    cnt = jnp.asarray(count, jnp.int32)
+    if cfg.rope_theta > 0:
+        pos = ci[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    k_cache = kv_cache_update_span(cache["k"], k, ci, cnt)
+    v_cache = kv_cache_update_span(cache["v"], v, ci, cnt)
+    out = prefill_attention(q, k_cache, v_cache, ci)
+    y = dense_apply(p["wo"], out.reshape(B, C, H * h))
+    return y, k_cache, v_cache
+
+
 def attn_decode_apply(
     p: dict, cfg, x: jnp.ndarray, cache: dict, cache_index,
     *, layer_window: int = -1,

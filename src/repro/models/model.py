@@ -341,3 +341,61 @@ def decode_step(params: dict, cfg: ModelConfig, cache: dict,
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = (x @ head)[:, 0]
     return shard_logits(logits), new_cache
+
+
+def prefill_step(params: dict, cfg: ModelConfig, cache: dict,
+                 batch: dict) -> tuple:
+    """Write a span of prompt tokens through the model at per-row cache
+    indices — the chunked-prefill primitive for the continuous batcher.
+
+    batch = {"tokens": (B, C), "cache_index": (B,), "count": (B,)} —
+    row b's ``tokens[b, :count[b]]`` land at cache positions
+    ``cache_index[b] .. cache_index[b]+count[b]-1``.  Rows with
+    ``count == 0`` are inert: their cache is untouched bit-for-bit
+    (padded lanes scatter out of bounds and are dropped), so slots deep
+    in decode can share a launch buffer with prefilling neighbours.
+
+    Returns ``(logits (B, vocab), new_cache)`` where row b's logits are
+    taken at its LAST valid lane (``count[b] - 1``) — the same shape
+    contract as :func:`decode_step`, so a slot whose prefill just
+    finished can seed decode from these logits.  Rows with ``count == 0``
+    return garbage logits that callers must not read.
+
+    Because every chunk runs through the same static ``(B, C)`` buffer
+    and each query's attention reduces over the full cache, chunked
+    prefill is bitwise identical to whole-prompt prefill (pinned by
+    tests/test_prefill.py).
+
+    Only full-cache attention families (dense/moe, no sliding window)
+    are supported — recurrent and ring-buffer caches have no
+    position-indexed span write.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"prefill_step needs a position-indexed KV cache "
+            f"(dense/moe), not family={cfg.family!r}")
+    if cfg.sliding_window > 0:
+        raise NotImplementedError(
+            "prefill_step writes absolute-position spans; ring-buffer "
+            "(sliding-window) caches would need modular span writes")
+    tokens = batch["tokens"]
+    cache_index = jnp.asarray(batch["cache_index"], jnp.int32)
+    count = jnp.asarray(batch["count"], jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard_act(x)
+    new_cache = dict(cache)
+    kind = _plan(cfg)[0][1]
+
+    def lyr_step(xx, lp, lc, _l):
+        return B.layer_prefill_apply(lp, cfg, xx, lc, cache_index, count,
+                                     kind)
+
+    x, new_layers = _decode_scan(params["layers"], cache["layers"], x,
+                                 lyr_step)
+    new_cache["layers"] = new_layers
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    last = jnp.clip(count - 1, 0, tokens.shape[1] - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    return shard_logits(logits), new_cache

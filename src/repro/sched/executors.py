@@ -839,6 +839,28 @@ class SlotExecutor:
             obs.instant("serve", "admit", n=len(placements))
         return placements
 
+    def prefill(self, slot: int, ntokens: int):
+        """One prefill chunk of ``ntokens`` prompt tokens executed
+        in-place in ``slot`` (DLBC worksharing: the chunk runs on the
+        slot that owns the request, no task is created for it).
+
+        Counted in the dedicated ``prefill_chunks``/``prefill_tokens``
+        counters — deliberately NOT in spawns/joins: the serving AFE
+        contract is one FinishScope join per REQUEST, and chunk
+        accounting must never disturb the ``spawns == joins``
+        quiescence invariant the CI gates replay.  Emits a
+        ``serve.prefill_chunk`` instant so the trace shows every chunk
+        without inflating the conservation-gated spawn/join events."""
+        with self.telemetry.lock:
+            self.telemetry.prefill_chunks += 1
+            self.telemetry.prefill_tokens += int(ntokens)
+        name = self.slot_tenant[slot]
+        if name is not None:
+            bucket = self.telemetry.tenant(name)
+            bucket.prefill_chunks += 1
+            bucket.prefill_tokens += int(ntokens)
+        obs.instant("serve", "prefill_chunk", n=int(ntokens))
+
     def tenant_busy_slots(self) -> Dict[str, int]:
         """Occupied-slot count per tenant right now (slot-share
         accounting: the serving stats integrate this every step)."""

@@ -256,6 +256,20 @@ class SchedPolicy:
         :class:`GrainController` so grain adapts to observed steals."""
         return GrainPlan()
 
+    def prefill_chunk_len(self, remaining: int, busy: int, cap: int) -> int:
+        """How many prompt tokens a prefilling slot should push through
+        the model this step (chunked prefill in the serving batcher).
+
+        ``remaining`` is the slot's unwritten prompt suffix, ``busy`` the
+        number of slots currently decoding (the latency-sensitive work a
+        long chunk would stall — the serving analogue of Fig. 6's idle
+        probe, re-checked every step), ``cap`` the static width of the
+        batched prefill launch buffer.  The base/static behaviour just
+        fills the buffer; DLBC resizes against ``busy``."""
+        if remaining <= 0:
+            return 0
+        return max(1, min(remaining, cap))
+
     def __repr__(self):  # pragma: no cover - debug aid
         return f"{type(self).__name__}()"
 
@@ -322,6 +336,24 @@ class DLBC(SchedPolicy):
 
     def grain_plan(self, n, capacity, telemetry=None):
         return self.grain.plan(n, capacity.total(), telemetry)
+
+    def prefill_chunk_len(self, remaining, busy, cap):
+        # Fig. 6 applied to prompt tokens: with ``busy`` decoding slots
+        # contending for the step, split the remaining prompt into
+        # busy + 1 shares and push one share's worth this step — a long
+        # prompt never holds latency-sensitive decodes hostage for more
+        # than its fair chunk.  Re-probed every step (the serial-block
+        # re-check), so the chunk grows back as decodes drain.  With no
+        # decodes in flight, fill the launch buffer.
+        if remaining <= 0:
+            return 0
+        if busy <= 0:
+            return max(1, min(remaining, cap))
+        plan = chunk_plan(0, remaining, busy,
+                          caller_keeps_smallest=self.caller_keeps_smallest)
+        first = plan.spawned[0] if plan.spawned else plan.caller
+        share = max(1, first[1] - first[0])
+        return max(1, min(share, remaining, cap))
 
 
 class DCAFE(DLBC):

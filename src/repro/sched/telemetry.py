@@ -151,6 +151,12 @@ class SchedCounters:
     barriers: int = 0
     steps: int = 0
     work: float = 0.0
+    #: chunked-prefill accounting (serving batcher).  Deliberately NOT
+    #: folded into spawns/joins: the serving AFE contract is one join
+    #: per REQUEST, so chunk counts must never disturb the
+    #: ``spawns == joins`` quiescence invariant the CI gates replay.
+    prefill_chunks: int = 0   # prefill chunk launches executed in-place
+    prefill_tokens: int = 0   # prompt tokens written through those chunks
 
 
 @dataclass
@@ -262,6 +268,10 @@ class SchedTelemetry(SchedCounters):
         return dict(
             spawns=sum(c.spawns for c in self.tenants.values()),
             joins=sum(c.joins for c in self.tenants.values()),
+            prefill_chunks=sum(c.prefill_chunks
+                               for c in self.tenants.values()),
+            prefill_tokens=sum(c.prefill_tokens
+                               for c in self.tenants.values()),
         )
 
     def record_exchange(self, *, sent: int = 0, received: int = 0,
@@ -344,6 +354,10 @@ class SchedTelemetry(SchedCounters):
             # of completions, not a complement
             completions=self.completions,
             errors=self.errors,
+            # serving chunked prefill: counted beside, never inside,
+            # spawns/joins (AFE: one join per request, not per chunk)
+            prefill_chunks=self.prefill_chunks,
+            prefill_tokens=self.prefill_tokens,
             n_latencies=len(self.latencies),
             p50_ms=round(self.p50() * 1e3, 3),
             p99_ms=round(self.p99() * 1e3, 3),
@@ -355,7 +369,9 @@ class SchedTelemetry(SchedCounters):
             }
         if self.tenants:  # only multi-tenant surfaces grow the extra key
             out["tenants"] = {
-                name: dict(spawns=c.spawns, joins=c.joins)
+                name: dict(spawns=c.spawns, joins=c.joins,
+                           prefill_chunks=c.prefill_chunks,
+                           prefill_tokens=c.prefill_tokens)
                 for name, c in sorted(self.tenants.items())
             }
         if self.exchange.posted or self.exchange.completed:
@@ -371,6 +387,7 @@ class SchedTelemetry(SchedCounters):
         self.work = 0.0
         self.serial_items = self.parallel_items = self.steals = 0
         self.splits = self.completions = self.errors = 0
+        self.prefill_chunks = self.prefill_tokens = 0
         self.steal_victims = {}
         self.tenants = {}
         self.exchange = ExchangeCounters()

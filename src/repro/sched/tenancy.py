@@ -151,6 +151,10 @@ class WeightedRefillPolicy(SchedPolicy):
     def admit(self, idle, queued, total_slots):
         return self.base.admit(idle, queued, total_slots)
 
+    def prefill_chunk_len(self, remaining, busy, cap):
+        # chunk arithmetic is the base policy's, like grain_plan below
+        return self.base.prefill_chunk_len(remaining, busy, cap)
+
     def grain_plan(self, n, capacity, telemetry=None):
         # host-side range work under a weighted policy chunks (and
         # steal-splits) exactly like its base: tenancy only changes

@@ -1,4 +1,5 @@
-"""Continuous-batching serving loop with DLBC slot scheduling.
+"""Continuous-batching serving loop with DLBC slot scheduling and
+DLBC-chunked prefill.
 
 The decode step runs a fixed-width batch of slots (static shapes for
 XLA).  The scheduler is the DLBC policy over *device slots*:
@@ -25,6 +26,24 @@ each freed slot goes to.  With a single tenant the admission trace is
 step-for-step identical to plain DLBC (pinned by
 ``tests/test_serve_regression.py``).
 
+Prefill is REAL and chunked.  On placement, prompt tokens ``0..L-2``
+are written into the KV cache by batched span-prefill launches
+(:func:`repro.models.model.prefill_step` — per-row cache indices, padded
+rows inert), and decode then starts from the LAST prompt token at
+position ``L-1``.  The span is split into DLBC-planned chunks: each
+step, every prefilling slot asks ``policy.prefill_chunk_len(remaining,
+busy, cap)`` — the Fig. 6 arithmetic with the *decoding* slot count as
+the contended capacity, re-probed per step like the serial block — so a
+long prompt interleaves with its neighbours' decode steps instead of
+holding them hostage for its whole prefill.  Chunked prefill is bitwise
+identical to whole-prompt prefill (every chunk runs through the same
+static launch buffer and each query attends over the full cache; pinned
+by ``tests/test_prefill.py``).  AFE: each request holds ONE
+:class:`FinishScope` spanning all its prefill chunks plus decode, joined
+exactly once at completion — telemetry counts joins == requests, with
+chunk work in the separate ``prefill_chunks``/``prefill_tokens``
+counters and ``serve.prefill_chunk`` trace spans.
+
 The admission decision itself lives in :mod:`repro.sched` (the shared
 policy engine): this module delegates slot refill to
 :class:`repro.sched.executors.SlotExecutor`, whose telemetry counts
@@ -33,16 +52,24 @@ analogues) alongside latency distributions — per tenant as well as
 globally, with the conservation invariant (per-tenant sums == globals)
 gated in CI.
 
-Cache positions are tracked PER SLOT and passed to ``decode_step`` as a
-``(n_slots,)`` vector: a freshly refilled slot decodes against ITS OWN
-position 0 while its neighbours keep decoding at theirs.  (The previous
-scheme shared one ``max(slot_pos)`` index across the batch, so a refill
-mid-decode wrote the new request's KV at the old request's position and
-attended over stale entries — see the refill-mid-decode regression
-test.)  Attention-family caches are fully isolated by the per-slot
-index + validity mask; SSM/hybrid recurrent state is not position-
-indexed and would additionally need a per-slot state reset on refill —
-the serving path is exercised with attention families.
+Cache positions are tracked PER SLOT and passed to ``decode_step`` /
+``prefill_step`` as a ``(n_slots,)`` vector: a freshly refilled slot
+prefills/decodes against ITS OWN position while its neighbours keep
+decoding at theirs.  (The previous scheme shared one ``max(slot_pos)``
+index across the batch, so a refill mid-decode wrote the new request's
+KV at the old request's position and attended over stale entries — see
+the refill-mid-decode regression test.)  Attention-family caches are
+fully isolated by the per-slot index + validity mask; SSM/hybrid
+recurrent state is not position-indexed and would additionally need a
+per-slot state reset on refill — the serving path is exercised with
+attention families.
+
+Step cost is accounted in slot-step *token units*: a step costs 1 for
+the decode launch plus the largest prefill chunk that shared it.
+``ServeStats.decode_step_costs`` records that cost once per decoded
+token, so the per-token decode-latency distribution (and its p99)
+directly exposes how much prefill work stalled decoders — the SLO
+surface ``bench_tenants`` gates under a long-prompt adversary.
 """
 
 from __future__ import annotations
@@ -57,7 +84,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import model as MDL
 from ..obs import trace as obs
-from ..sched.executors import SlotExecutor
+from ..sched.executors import FinishScope, RangeLatch, SlotExecutor
 from ..sched.policy import SchedPolicy
 from ..sched.telemetry import percentile
 from ..sched.tenancy import TenantRegistry, WeightedRefillPolicy
@@ -80,8 +107,23 @@ class ServeStats:
     steps: int = 0
     busy_slot_steps: int = 0
     total_slot_steps: int = 0
+    #: step index at which this stats object started integrating — 0 for
+    #: the global stats; for a tenant first seen mid-run it is the
+    #: backfill point, so ``steps``/``total_slot_steps`` stay comparable
+    #: across tenants (conservation: every tenant's denominators equal
+    #: the global ones).
+    first_step: int = 0
+    #: requests killed by the cache bound (``slot_pos`` ran into
+    #: ``cache_len``) before producing ``max_new`` tokens — counted
+    #: separately from normal completions so an SLO gate cannot be
+    #: satisfied by silently cutting sequences short.
+    truncated: int = 0
     latencies: list = field(default_factory=list)
     queue_waits: list = field(default_factory=list)
+    #: one entry per decoded token: the slot-step cost of the step that
+    #: produced it (1 + the largest prefill chunk sharing the step) —
+    #: the per-token decode latency surface in virtual-time units.
+    decode_step_costs: list = field(default_factory=list)
 
     @property
     def utilization(self) -> float:
@@ -95,13 +137,38 @@ class ServeStats:
     def p99_latency(self) -> float:
         return percentile(self.latencies, 99)
 
+    @property
+    def p50_decode_cost(self) -> float:
+        return percentile(self.decode_step_costs, 50)
+
+    @property
+    def p99_decode_cost(self) -> float:
+        return percentile(self.decode_step_costs, 99)
+
     def summary(self) -> Dict:
         return dict(steps=self.steps, utilization=round(self.utilization, 4),
                     n_done=len(self.latencies),
+                    truncated=self.truncated,
                     p50_latency=self.p50_latency,
                     p99_latency=self.p99_latency,
                     mean_queue_wait=(float(np.mean(self.queue_waits))
-                                     if self.queue_waits else 0.0))
+                                     if self.queue_waits else 0.0),
+                    n_decode_tokens=len(self.decode_step_costs),
+                    p50_decode_cost=self.p50_decode_cost,
+                    p99_decode_cost=self.p99_decode_cost)
+
+
+class _PrefillState:
+    """Progress of one request's span prefill: the prompt prefix still
+    owed to the cache, a cursor, and the range latch its chunks
+    discharge into (one latch per request — the AFE join waits it)."""
+
+    __slots__ = ("tokens", "cursor", "latch")
+
+    def __init__(self, tokens: List[int], latch: RangeLatch):
+        self.tokens = tokens
+        self.cursor = 0
+        self.latch = latch
 
 
 class ContinuousBatcher:
@@ -111,9 +178,12 @@ class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  cache_len: int = 256,
                  policy: Union[str, SchedPolicy] = "dlbc",
-                 tenants: Optional[Dict[str, float]] = None):
+                 tenants: Optional[Dict[str, float]] = None,
+                 prefill_chunk: int = 32,
+                 prefill_mode: str = "chunked"):
         assert isinstance(policy, SchedPolicy) \
             or policy in ("dlbc", "lc", "wdlbc")
+        assert prefill_mode in ("chunked", "whole"), prefill_mode
         if cfg.family in ("ssm", "hybrid"):
             # The per-slot cache index isolates attention KV across a
             # refill, but SSM/hybrid recurrent state is not position-
@@ -129,6 +199,15 @@ class ContinuousBatcher:
         self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
+        #: static width of the batched prefill launch buffer — every
+        #: chunk pads to this, which is what keeps chunked prefill
+        #: bitwise equal to whole-prompt prefill (one compiled shape)
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        #: "chunked" interleaves DLBC-planned chunks with decode steps;
+        #: "whole" drains a request's entire prefill in its placement
+        #: step (the unchunked baseline arm the adversary bench compares
+        #: against)
+        self.prefill_mode = prefill_mode
         self.sched = SlotExecutor(n_slots, policy=policy)
         self.policy = self.sched.policy.name
         # tenant mode: explicit weights, or any weighted-refill policy
@@ -146,6 +225,12 @@ class ContinuousBatcher:
         self.cache = MDL.init_cache(cfg, n_slots, cache_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
+        #: one FinishScope per in-flight request, spanning all its
+        #: prefill chunks; joined exactly once at completion (AFE)
+        self.slot_scope: List[Optional[FinishScope]] = [None] * n_slots
+        #: slots whose prompt prefix is still being written (slot →
+        #: prefill progress); a slot decodes only once it leaves here
+        self._prefilling: Dict[int, _PrefillState] = {}
         self.queue: List[Request] = []   # single-queue (anonymous) mode
         self.stats = ServeStats()
         self.tenant_stats: Dict[str, ServeStats] = {}
@@ -155,20 +240,63 @@ class ContinuousBatcher:
         #: admission trace: (step, slot, rid, tenant) per placement — the
         #: golden-file surface of the regression tests
         self.admissions: List[Tuple[int, int, int, str]] = []
+        #: virtual clock in slot-step token units (decodes cost 1, a
+        #: prefill round costs its largest chunk) — the time base of the
+        #: decode-cost SLO surface
+        self.vtime = 0
         self._decode = jax.jit(
             lambda p, c, b: MDL.decode_step(p, cfg, c, b))
+        self._prefill = jax.jit(
+            lambda p, c, b: MDL.prefill_step(p, cfg, c, b))
 
     # -- admission (DLBC vs LC vs weighted-DLBC) -----------------------------
 
     def submit(self, req: Request, tenant: Optional[str] = None):
         """Queue a request.  ``tenant`` overrides ``req.tenant``; in
-        single-queue mode tenant labels are carried but not scheduled on."""
+        single-queue mode tenant labels are carried but not scheduled on.
+
+        Validates the prompt here, at the boundary: an empty prompt used
+        to crash deep in ``step()`` (``tokens[-1]`` IndexError) and
+        out-of-vocab ids used to be silently wrapped ``% vocab`` —
+        both now fail loudly at submission."""
         if tenant is not None:
             req.tenant = tenant
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — decode needs at "
+                f"least one token to feed the first step")
+        bad = [int(t) for t in req.prompt
+               if not 0 <= int(t) < self.cfg.vocab]
+        if bad:
+            raise ValueError(
+                f"request {req.rid}: prompt ids {bad[:4]} outside "
+                f"[0, {self.cfg.vocab}) — out-of-vocab ids are not "
+                f"silently remapped")
+        if len(req.prompt) > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"cannot fit cache_len={self.cache_len}")
+        if len(req.prompt) > 1 and (self.cfg.sliding_window > 0
+                                    or self.cfg.family not in
+                                    ("dense", "moe")):
+            raise NotImplementedError(
+                f"span prefill needs a full position-indexed KV cache "
+                f"(dense/moe, no sliding window); "
+                f"family={self.cfg.family!r} "
+                f"sliding_window={self.cfg.sliding_window} is limited "
+                f"to single-token prompts")
         if self.registry is not None:
             self.registry.submit(req, req.tenant)
             if req.tenant not in self.tenant_stats:
-                self.tenant_stats[req.tenant] = ServeStats()
+                # Backfill the denominators: a tenant first seen mid-run
+                # starts from the GLOBAL step/slot-step counts, so its
+                # utilization shares the same denominator as tenants
+                # registered at step 0 (conservation invariant asserted
+                # in test_tenancy_property).
+                self.tenant_stats[req.tenant] = ServeStats(
+                    steps=self.stats.steps,
+                    total_slot_steps=self.stats.total_slot_steps,
+                    first_step=self.stats.steps)
         else:
             self.queue.append(req)
 
@@ -192,18 +320,85 @@ class ContinuousBatcher:
             self.tenant_stats[req.tenant].queue_waits.append(wait)
         self.admissions.append((now, slot, req.rid, req.tenant))
         self.slot_req[slot] = req
-        # prefill approximated token-by-token for simplicity of the
-        # simulator; prompt tokens replay through decode_step
+        # Real prefill: prompt tokens 0..L-2 are written into the KV
+        # cache by span-prefill chunks (interleaved with decode steps by
+        # the policy's chunk arithmetic); decode then starts from the
+        # LAST prompt token at position L-1.
         self.slot_pos[slot] = 0
         req.tokens = list(req.prompt)
+        prefix = req.prompt[:-1]
+        # One FinishScope per request over ONE latch covering every
+        # prefill chunk (AFE: chunks discharge the latch, the scope is
+        # joined once at completion).  telemetry=None — the request's
+        # single counted join stays sched.complete()'s.
+        scope = FinishScope()
+        latch = RangeLatch(len(prefix))
+        scope.add([latch])
+        self.slot_scope[slot] = scope
+        if prefix:
+            self._prefilling[slot] = _PrefillState(prefix, latch)
+
+    # -- chunked prefill ------------------------------------------------------
+
+    def _prefill_phase(self) -> int:
+        """Run prefill chunks for every prefilling slot (one batched
+        ``prefill_step`` launch per round; rows of non-prefilling slots
+        are inert via ``count == 0``).  Chunk lengths come from the
+        policy's Fig. 6 arithmetic against the number of DECODING slots,
+        re-probed every step; ``prefill_mode="whole"`` instead drains
+        each prefill completely in this one step (the unchunked
+        baseline).  Returns the phase's cost in token units (the largest
+        chunk of each round, summed over rounds)."""
+        n_decoding = sum(1 for i, r in enumerate(self.slot_req)
+                         if r is not None and i not in self._prefilling)
+        cost = 0
+        while self._prefilling:
+            chunk_of: Dict[int, int] = {}
+            for i, st in self._prefilling.items():
+                rem = len(st.tokens) - st.cursor
+                if self.prefill_mode == "whole":
+                    c = min(rem, self.prefill_chunk)
+                else:
+                    c = self.sched.policy.prefill_chunk_len(
+                        rem, n_decoding, self.prefill_chunk)
+                chunk_of[i] = max(1, min(int(c), rem, self.prefill_chunk))
+            tokens = np.zeros((self.n_slots, self.prefill_chunk), np.int32)
+            counts = np.zeros(self.n_slots, np.int32)
+            for i, c in chunk_of.items():
+                st = self._prefilling[i]
+                tokens[i, :c] = st.tokens[st.cursor:st.cursor + c]
+                counts[i] = c
+            with obs.trace_span("serve", "prefill_chunk",
+                                {"slots": len(chunk_of),
+                                 "tokens": int(sum(chunk_of.values()))}
+                                if obs.enabled() else None):
+                _, self.cache = self._prefill(
+                    self.params, self.cache,
+                    {"tokens": jnp.asarray(tokens),
+                     "cache_index": jnp.asarray(self.slot_pos, jnp.int32),
+                     "count": jnp.asarray(counts, jnp.int32)})
+            cost += max(chunk_of.values())
+            for i, c in chunk_of.items():
+                st = self._prefilling[i]
+                st.cursor += c
+                self.slot_pos[i] += c
+                st.latch.discharge(c)
+                self.sched.prefill(i, c)
+                if st.cursor >= len(st.tokens):
+                    # prefix complete: the slot joins decode THIS step
+                    del self._prefilling[i]
+            if self.prefill_mode != "whole":
+                break  # chunked: one round per step, re-probe next step
+        return cost
 
     # -- one decode step across all slots ------------------------------------
 
     def step(self, now: int):
-        # obs phases (cat="serve"): refill → decode → complete, so a
-        # trace shows where a decode step's wall time goes (admission
-        # arithmetic vs device step vs completion bookkeeping) and slot
-        # occupancy can be read against the admit/join instants.
+        # obs phases (cat="serve"): refill → prefill_chunk* → decode →
+        # complete, so a trace shows where a step's wall time goes
+        # (admission arithmetic vs span prefill vs device step vs
+        # completion bookkeeping) and slot occupancy can be read against
+        # the admit/join/prefill_chunk instants.
         with obs.trace_span("serve", "refill"):
             self._admit(now)
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -218,42 +413,75 @@ class ContinuousBatcher:
         for name, n_busy in self.sched.tenant_busy_slots().items():
             self.tenant_stats[name].busy_slot_steps += n_busy
         if not active:
+            self.vtime += 1
             return
-        with obs.trace_span("serve", "decode",
-                            {"active": len(active)} if obs.enabled()
-                            else None):
-            tokens = np.zeros((self.n_slots, 1), np.int32)
-            for i in active:
-                tokens[i, 0] = self.slot_req[i].tokens[-1] % self.cfg.vocab
-            # Per-slot cache positions: each slot writes/attends at ITS
-            # OWN index, so a freshly refilled slot (pos 0) is isolated
-            # from a neighbour deep into its sequence (refill-mid-decode
-            # safety).
-            cache_index = jnp.asarray(self.slot_pos, jnp.int32)
-            logits, self.cache = self._decode(
-                self.params, self.cache,
-                {"tokens": jnp.asarray(tokens), "cache_index": cache_index})
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        prefill_cost = 0
+        if self._prefilling:
+            prefill_cost = self._prefill_phase()
+        decoding = [i for i in active if i not in self._prefilling]
+        step_cost = prefill_cost + (1 if decoding else 0)
+        if decoding:
+            with obs.trace_span("serve", "decode",
+                                {"active": len(decoding)} if obs.enabled()
+                                else None):
+                tokens = np.zeros((self.n_slots, 1), np.int32)
+                for i in decoding:
+                    tokens[i, 0] = self.slot_req[i].tokens[-1]
+                # Per-slot cache positions: each slot writes/attends at
+                # ITS OWN index, so a freshly refilled slot is isolated
+                # from a neighbour deep into its sequence
+                # (refill-mid-decode safety).
+                cache_index = jnp.asarray(self.slot_pos, jnp.int32)
+                logits, self.cache = self._decode(
+                    self.params, self.cache,
+                    {"tokens": jnp.asarray(tokens),
+                     "cache_index": cache_index})
+                # argmax over the REAL vocab: the padded tail rows of the
+                # lm_head are arbitrary init values, and generated ids
+                # must stay submittable (no silent % vocab anywhere)
+                nxt = np.asarray(
+                    jnp.argmax(logits[:, :self.cfg.vocab], axis=-1))
         with obs.trace_span("serve", "complete"):
-            for i in active:
+            for i in decoding:
                 r = self.slot_req[i]
                 r.tokens.append(int(nxt[i]))
                 self.slot_pos[i] += 1
+                # per-token decode latency in token units: 1 for the
+                # decode plus whatever prefill work shared the step
+                self.stats.decode_step_costs.append(step_cost)
+                ts = self.tenant_stats.get(r.tenant)
+                if ts is not None:
+                    ts.decode_step_costs.append(step_cost)
                 produced = len(r.tokens) - len(r.prompt)
-                if produced >= r.max_new \
-                        or self.slot_pos[i] >= self.cache_len - 1:
+                done = produced >= r.max_new
+                trunc = (not done) and self.slot_pos[i] >= self.cache_len - 1
+                if done or trunc:
+                    if trunc:
+                        # cache-bound kill: count it apart from normal
+                        # completions so p99 gates can't be satisfied by
+                        # silently cutting sequences short
+                        self.stats.truncated += 1
+                        if ts is not None:
+                            ts.truncated += 1
                     r.done_step = now
                     # latencies live in ServeStats (the serving-facing
                     # record); telemetry only counts the join so Fig. 10
                     # comparisons hold
                     lat = now - r.arrive_step
                     self.stats.latencies.append(lat)
-                    ts = self.tenant_stats.get(r.tenant)
                     if ts is not None:
                         ts.latencies.append(lat)
+                    scope = self.slot_scope[i]
+                    if scope is not None:
+                        # AFE: the request's ONE join point — waits the
+                        # latch spanning every prefill chunk (already
+                        # discharged in-step), never one join per chunk
+                        scope.join()
+                        self.slot_scope[i] = None
                     self.sched.complete(slot=i)
                     self.slot_req[i] = None
                     self.slot_pos[i] = 0
+        self.vtime += max(1, step_cost)
 
     # -- driving --------------------------------------------------------------
 

@@ -118,7 +118,14 @@ def oracle_trace(requests, n_slots, cache_len, policy,
             r = queues[tenant].pop(0)
             slot = idle[j]
             slots[slot] = r.rid
-            remaining[r.rid] = min(r.max_new, cache_len - 1)
+            # Decode-step service time.  Every trace prompt is [1, 2]:
+            # its single-token prefix prefills in the placement step's
+            # prefill phase (chunk of 1 regardless of contention), so
+            # the slot decodes that same step and holds for max_new
+            # decode steps (the cache bound — slot_pos starts at
+            # len(prompt) - 1 — is never hit at these max_new values).
+            remaining[r.rid] = min(r.max_new,
+                                   cache_len - len(r.prompt))
             admissions.append((now, slot, r.rid, r.tenant))
         active = [i for i, s in enumerate(slots) if s is not None]
         total += n_slots

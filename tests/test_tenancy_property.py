@@ -233,3 +233,40 @@ def test_seeded_chunk_plan_sweep():
         check_chunk_plan(int(rng.integers(0, 1000)),
                          int(rng.integers(0, 5000)),
                          int(rng.integers(0, 64)))
+
+
+def test_midrun_tenant_stats_share_global_denominators():
+    """Conservation of the per-tenant stats denominators: a tenant first
+    seen via ``submit()`` MID-RUN is backfilled to the global
+    step/slot-step counts, so ``utilization`` is comparable across
+    tenants regardless of when each first appeared (the skew this
+    pins: late tenants used to integrate from their arrival, inflating
+    their utilization denominator-relative)."""
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models import model as MDL
+    from repro.serve.batcher import ContinuousBatcher, Request
+
+    cfg = ModelConfig(name="mid", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=128)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0))
+    b = ContinuousBatcher(cfg, params, n_slots=2, cache_len=16,
+                          policy="wdlbc", tenants={"early": 1.0})
+    reqs = [Request(rid=0, prompt=[1, 2], max_new=4, arrive_step=0,
+                    tenant="early"),
+            # "late" does not exist in the registry until this arrives
+            Request(rid=1, prompt=[3, 4], max_new=4, arrive_step=6,
+                    tenant="late"),
+            Request(rid=2, prompt=[5], max_new=3, arrive_step=9,
+                    tenant="early")]
+    b.run(reqs)
+    late = b.tenant_stats["late"]
+    assert late.first_step == 6  # created at its first submit
+    for name, st in b.tenant_stats.items():
+        # every tenant integrates the SAME denominators as the globals
+        assert st.steps == b.stats.steps, name
+        assert st.total_slot_steps == b.stats.total_slot_steps, name
+    # numerators still conserve: per-tenant busy sums to global busy
+    assert sum(st.busy_slot_steps for st in b.tenant_stats.values()) \
+        == b.stats.busy_slot_steps
