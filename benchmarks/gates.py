@@ -10,6 +10,7 @@ tested outside CI)::
     python -m benchmarks.gates ep         experiments/bench/ep.json
     python -m benchmarks.gates tenants    experiments/bench/tenants.json
     python -m benchmarks.gates serve      experiments/bench/batcher.json
+    python -m benchmarks.gates faults     experiments/bench/faults.json
     python -m benchmarks.gates trace      experiments/bench
     python -m benchmarks.gates dist       experiments/bench/sched.json
     python -m benchmarks.gates trajectory experiments/bench \\
@@ -263,6 +264,64 @@ def gate_serve(path) -> list:
     return bad
 
 
+def gate_faults(path) -> list:
+    """Chaos lane from ``faults.json``: zero exceptions lost under
+    injection (``injected == telemetry errors == collected-in-
+    MultipleExceptions``, re-derived from the raw per-arm counters, both
+    fail modes), item/task conservation on every arm including worker
+    death, and the stored bootstrap-CI p99-under-faults verdict replayed
+    from the samples."""
+    if _skip(path):
+        return []
+    env = load_envelope(path)
+    recs = [r for r in env["records"] if r.get("arm") not in (None, "gates")]
+    if not recs:
+        return ["no chaos records in artifact"]
+    last = max(r.get("attempt", 1) for r in recs)
+    by = {r["arm"]: r for r in recs if r.get("attempt", 1) == last}
+    bad = []
+    for arm, r in sorted(by.items()):
+        print(f"{arm}: injected={r['injected']} collected={r['collected']} "
+              f"errors={r['errors']} deaths={r['worker_deaths']} "
+              f"exceptions_lost={r['exceptions_lost']} unaccounted="
+              f"{r['items_unaccounted'] + r['tasks_unaccounted']}")
+        if r["exceptions_lost"]:
+            bad.append(f"{arm}: {r['exceptions_lost']} exception "
+                       "count deviations across repeats (an injected "
+                       "fault was swallowed or double-counted)")
+        if r["items_unaccounted"] or r["tasks_unaccounted"]:
+            bad.append(f"{arm}: items/tasks unaccounted under chaos "
+                       f"({r['items_unaccounted']} items, "
+                       f"{r['tasks_unaccounted']} tasks)")
+    # totals re-derived from the artifact, not trusted per-repeat fields:
+    # every raised fault must surface as an error AND reach the join
+    for arm in ("faulted_rtc", "faulted_ff"):
+        r = by.get(arm)
+        if r is None:
+            bad.append(f"no {arm} arm in artifact")
+            continue
+        if not (r["injected"] == r["errors"] == r["collected"]):
+            bad.append(f"{arm}: injected {r['injected']} != errors "
+                       f"{r['errors']} != collected {r['collected']} "
+                       "(raised != injected)")
+        if r["injected"] < 1:
+            bad.append(f"{arm}: chaos lane ran fault-free")
+    wd = by.get("worker_death")
+    if wd is None:
+        bad.append("no worker_death arm in artifact")
+    elif wd["worker_deaths"] < 1 or wd["deaths_unaccounted"]:
+        bad.append(f"worker deaths not conserved against injections "
+                   f"({wd['worker_deaths']} deaths, "
+                   f"{wd['deaths_unaccounted']} unaccounted)")
+    replayed = _replay_harness(env, label="faults")
+    if replayed is None:
+        bad.append("no harness section — bench_faults did not emit "
+                   "distribution gates")
+    else:
+        bad.extend(replayed)
+    return bad
+
+
 # ---------------------------------------------------------------------------
 # distribution gates (harness section replay)
 # ---------------------------------------------------------------------------
@@ -412,6 +471,7 @@ GATES = {
     "trace": gate_trace,
     "tenants": gate_tenants,
     "serve": gate_serve,
+    "faults": gate_faults,
     "dist": gate_dist,
 }
 

@@ -15,6 +15,9 @@ One benchmark per paper table/figure plus the TPU-side analogues:
   sched      — repro.sched policy ladder on the host pool (uniform/skewed)
   grain      — adaptive-grain work stealing: steal-driven splitting vs
                fixed grains (uniform overhead collapse + skew rebalance)
+  faults     — chaos lane: seeded fault injection (raises, fail-fast
+               cancellation, worker death) with exact exception/item
+               conservation gates and a p99-under-faults CI bound
   adoption   — sched adoption surfaces: train-step / checkpoint / MoE
                spawn-join telemetry + the DCAFE≤LC join regression gate
   design     — paper §6 DLBC design-choice study
@@ -32,15 +35,17 @@ import time
 
 from . import (
     bench_adoption, bench_batcher, bench_design_choices, bench_ep,
-    bench_fig10_counts, bench_fig11_speedup, bench_fig12_schemes,
-    bench_fig13_energy, bench_grain, bench_moe_dispatch, bench_roofline,
-    bench_sched, bench_sync_policy, bench_tenants,
+    bench_faults, bench_fig10_counts, bench_fig11_speedup,
+    bench_fig12_schemes, bench_fig13_energy, bench_grain,
+    bench_moe_dispatch, bench_roofline, bench_sched, bench_sync_policy,
+    bench_tenants,
 )
 from .common import set_run_context
 
 ALL = {
     "adoption": bench_adoption.run,
     "ep": bench_ep.run,
+    "faults": bench_faults.run,
     "grain": bench_grain.run,
     "fig10": bench_fig10_counts.run,
     "fig11": bench_fig11_speedup.run,

@@ -26,7 +26,9 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import threading
 import time
+import traceback
 import weakref
 from pathlib import Path
 from typing import Callable, Optional
@@ -36,20 +38,26 @@ import numpy as np
 
 from ..obs import trace as obs
 from ..sched import (
-    FinishScope, SchedTelemetry, ThreadExecutor, WorkStealingExecutor,
-    get_policy,
+    FinishScope, MultipleExceptions, RetryPolicy, SchedTelemetry,
+    TaskError, ThreadExecutor, WorkStealingExecutor, get_policy,
 )
+from ..sched import faults
 
 
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3,
                  executor: Optional[ThreadExecutor] = None,
                  sched_policy: str = "dcafe", n_io_workers: int = 4,
-                 stealing: bool = False):
+                 stealing: bool = False,
+                 retry: Optional[RetryPolicy] = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.policy = get_policy(sched_policy)
+        #: per-shard write retries: a transiently failing shard retries
+        #: (bounded, deterministic backoff keyed by shard index) without
+        #: aborting the save; only exhausted retries fail the publish.
+        self.retry = retry if retry is not None else RetryPolicy(attempts=3)
         # The I/O pool is created lazily on the first save: restore-only
         # managers never spawn threads, and close() is only needed once
         # a save has run.
@@ -109,15 +117,22 @@ class CheckpointManager:
 
     def wait(self):
         """Join the pending save (ONE join — the escaped finish) and
-        atomically publish it."""
+        atomically publish it.  Shard failures collected by the scope
+        (after their per-shard retries were exhausted) surface HERE, as
+        the publish's ``RuntimeError`` — a failed shard can never be
+        COMMITted, and the temp dir is left un-published for forensics.
+        """
+        scope_errors = []
         if self._scope is not None:
-            self._scope.join()
-            self._scope = None
+            scope, self._scope = self._scope, None
+            out = scope.wait()  # non-raising: publish reports, once
+            if out.failed:
+                scope_errors = list(out.errors)
         if self._finalize is not None:
             # cleared before the call: a failed publish raises once, not
             # on every subsequent wait()/close()
             fin, self._finalize = self._finalize, None
-            fin()
+            fin(scope_errors)
 
     def close(self):
         try:
@@ -159,34 +174,58 @@ class CheckpointManager:
                 arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
             manifest[path] = {"file": fname, "shape": list(arr.shape),
                               "dtype": logical_dtype}
-            shard_jobs.append((tmp / fname, arr))
+            # the shard index rides along as the retry jitter key — a
+            # stable int, never hash(filename) (salted per process)
+            shard_jobs.append((tmp / fname, arr, i))
 
-        # Failed writes are collected rather than raised on the worker
-        # (an exception would kill the pool thread but still fire the
-        # task's done event, letting the join succeed); publish() checks
-        # the list so a failed shard can never be COMMITted.
-        errors = []
+        # A transiently failing shard retries in place (bounded backoff,
+        # without aborting the sibling writes); only exhausted retries
+        # fail the shard, and those are CONTAINED here — collected under
+        # a lock regardless of whether the shard ran on a worker or on
+        # the caller's chunk (caller items would otherwise propagate raw
+        # and abort the loop mid-save) — then re-checked by publish() so
+        # a failed shard can never be COMMITted.
+        collected = []  # TaskErrors from exhausted per-shard retries
+        collected_lock = threading.Lock()
 
         def write_shard(job):
-            fname, arr = job
-            try:
+            fname, arr, idx = job
+
+            def attempt():
+                plan = faults.active()
+                if plan is not None:
+                    plan.poke("ckpt.shard")
                 with obs.trace_span("ckpt", "shard_write",
                                     {"bytes": int(arr.nbytes)}
                                     if obs.enabled() else None):
                     np.save(fname, arr)
-            except Exception as e:  # noqa: BLE001 — re-raised at publish
-                errors.append((str(fname), e))
 
-        self.executor.run_loop(shard_jobs, write_shard, policy=self.policy,
-                               scope=scope)
+            try:
+                self.retry.run(attempt, key=idx, site="ckpt.shard",
+                               telemetry=self.telemetry)
+            except Exception as e:
+                with collected_lock:
+                    collected.append(TaskError(
+                        exc=e, site="ckpt.shard", lo=idx, hi=idx + 1,
+                        tb=traceback.format_exc()))
 
-        def publish():
+        try:
+            self.executor.run_loop(shard_jobs, write_shard,
+                                   policy=self.policy, scope=scope)
+        except MultipleExceptions as e:
+            # defensive: write_shard contains its own failures, but any
+            # error a join still surfaces must reach publish identically
+            collected.extend(e.errors)
+
+        def publish(scope_errors=()):
+            errors = collected + list(scope_errors)
             if errors:
-                fname, err = errors[0]
+                err = errors[0]
                 raise RuntimeError(
                     f"checkpoint step {step}: {len(errors)} shard "
-                    f"write(s) failed (first: {fname}: {err!r}); "
-                    "leaving the un-COMMITted temp dir") from err
+                    f"write(s) failed after retries "
+                    f"(first: {err.summary()}); "
+                    "leaving the un-COMMITted temp dir") from err.exc
             with obs.trace_span("ckpt", "publish", {"step": step}
                                 if obs.enabled() else None):
                 (tmp / f"manifest_{proc}.json").write_text(

@@ -50,14 +50,16 @@ from ..models.moe import (
     _expert_load, _positions_in_expert, capacity, dlbc_reroute, route,
 )
 from ..sched import ExpertCapacityProvider, SchedTelemetry
+from ..sched import faults
 from ..sched.executors import FinishScope
+from ..sched.faults import ShardLossError
 from .collective import EXPERT_AXIS, exchange, shard_map, token_shards
 from .plan import lane_capacity
 
 
 def _ep_shard(x, router, w1, w3, w2, *, E: int, S: int, K: int,
               C_lane: int, C_local: int, act: str, use_kernel: bool,
-              impl: str, reassign: bool):
+              impl: str, reassign: bool, dead_shards: tuple = ()):
     """One expert shard's slice of the dispatch round (under shard_map).
 
     Returns ``(y_local, stats_row)`` where ``stats_row`` is the shard's
@@ -74,7 +76,15 @@ def _ep_shard(x, router, w1, w3, w2, *, E: int, S: int, K: int,
     gates, ids, probs = route(x, router, K)          # (Tl, K)
     dest = ids // E_local                            # destination shard
     pos = _positions_in_expert(dest, S)              # rank in my lane
-    keep1 = lane_cap.admit_mask(pos)
+    # Graceful degradation: a dead shard's lanes are CLOSED at the
+    # admission mask, so no pair is ever packed toward it — under
+    # ``reassign`` the re-route below moves those pairs onto live
+    # shards with lane residual BEFORE the collective (dlbc_reroute,
+    # the same round-2 machinery), under LC they drop like any
+    # overflow.  ``dead_shards`` is static (a traced attempt per dead
+    # set), so XLA sees a constant mask.
+    alive_v = jnp.asarray([s not in dead_shards for s in range(S)])
+    keep1 = lane_cap.admit_mask(pos) & alive_v[dest]
     # Overflow reassignment, single-probe (static shapes): a pair whose
     # lane is full re-routes ONCE to its best expert on a shard whose
     # lane still has residual rows — reassigned before the collective,
@@ -89,7 +99,7 @@ def _ep_shard(x, router, w1, w3, w2, *, E: int, S: int, K: int,
         resid = lane_cap.residual(lane_load)
         ids_f, dest_f, pos_f, keep, gates_f, overflow = dlbc_reroute(
             ids, gates, probs, pos, keep1, lane_load, lane_cap, S,
-            expert_open=jnp.repeat(resid > 0, E_local),
+            expert_open=jnp.repeat((resid > 0) & alive_v, E_local),
             group_of=lambda i: i // E_local)
     else:
         # LC lane semantics (moe_dispatch="lc"): static single-round
@@ -148,7 +158,8 @@ def _ep_shard(x, router, w1, w3, w2, *, E: int, S: int, K: int,
 
 def ep_dispatch_combine(p: dict, cfg, x, *, mesh, use_kernel: bool = False,
                         impl: str = "all_to_all",
-                        return_stats: bool = False):
+                        return_stats: bool = False,
+                        dead_shards: tuple = ()):
     """Expert-parallel dispatch → FFN → combine over the ``expert`` axis.
 
     ``x`` is the flattened ``(T, d)`` token matrix; the shard_map
@@ -156,6 +167,11 @@ def ep_dispatch_combine(p: dict, cfg, x, *, mesh, use_kernel: bool = False,
     special input placement.  Requires ``T % S == 0 and E % S == 0``
     (checked — callers use :func:`repro.ep.collective.token_shards` to
     fall back to the single-host path otherwise).
+
+    ``dead_shards`` runs the round DEGRADED: the listed shards' lanes
+    are closed at admission, so their traffic re-routes to live shards
+    (DLBC) or drops (LC) before the collective — see
+    :func:`ep_round` for the retry loop that discovers the dead set.
     """
     T, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
@@ -164,6 +180,14 @@ def ep_dispatch_combine(p: dict, cfg, x, *, mesh, use_kernel: bool = False,
         raise ValueError(
             f"EP dispatch needs an expert axis dividing T={T} and "
             f"E={E}; mesh axes {getattr(mesh, 'axis_names', None)}")
+    dead_shards = tuple(sorted({int(s) for s in dead_shards}))
+    if dead_shards:
+        bad = [s for s in dead_shards if not 0 <= s < S]
+        if bad:
+            raise ValueError(f"dead_shards {bad} outside [0, {S})")
+        if len(dead_shards) >= S:
+            raise ValueError(
+                f"all {S} shards dead — nothing left to degrade onto")
     C_lane = lane_capacity(T // S, K, S, cfg.moe_capacity_factor)
     # Per-expert capacity matches the single-host formula on the GLOBAL
     # token count, so admission (and numerics) line up shard-for-shard.
@@ -182,7 +206,8 @@ def ep_dispatch_combine(p: dict, cfg, x, *, mesh, use_kernel: bool = False,
                  # "lc" keeps its static single-round semantics on the EP
                  # substrate too (no reassignment) so the LC-vs-DLBC
                  # comparison stays meaningful shard-side
-                 reassign=cfg.moe_dispatch != "lc")
+                 reassign=cfg.moe_dispatch != "lc",
+                 dead_shards=dead_shards)
     mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(P(EXPERT_AXIS, None), P(None, None),
@@ -227,8 +252,23 @@ def ep_round(p: dict, cfg, x, *, mesh,
     the admitted pairs, ``joins`` by exactly one, and
     ``telemetry.exchange`` by the sent/received/reassigned/dropped
     counts.  Returns ``(y, stats)`` with host-int stats.
+
+    Shard loss degrades, it does not abort: a
+    :class:`~repro.sched.faults.ShardLossError` (raised by the
+    fault-injection hook before the round posts, or by a caller-side
+    health check) adds the shard to the round's dead set, bumps the
+    retry telemetry, and re-attempts with that shard's lanes closed —
+    the traffic re-routes to live shards via the existing
+    ``dlbc_reroute`` before the collective.  A degraded round that
+    completes counts ``exchange.degraded_rounds`` (and the stats carry
+    ``degraded``/``dead_shards``); losing the LAST live shard, or the
+    same shard twice, re-raises.  The loss check runs before ``posted``
+    is counted, so posted == completed holds under degradation.
     """
     telemetry = telemetry if telemetry is not None else SchedTelemetry()
+    plan = faults.active()
+    dead: set = set()
+    S = token_shards(x.shape[0], cfg.n_experts, mesh)
     # obs round edges (cat="ep"): ``round_posted`` when the round's
     # collectives are launched, ``round_completed`` when its single
     # barrier lands — the same two edges ``ExchangeCounters.posted`` /
@@ -239,18 +279,34 @@ def ep_round(p: dict, cfg, x, *, mesh,
     # The in-jit legs (dispatch a2a → expert FFN → combine a2a) are one
     # XLA computation and not separately host-visible — the host phases
     # are launch (trace+compile+enqueue) and barrier (device work).
-    with obs.trace_span("ep", "round"):
-        with FinishScope(telemetry):
-            obs.instant("ep", "round_posted")
-            telemetry.record_exchange(posted=1)
-            with obs.trace_span("ep", "launch"):
-                y, stats = ep_dispatch_combine(p, cfg, x, mesh=mesh,
-                                               use_kernel=use_kernel,
-                                               impl=impl, return_stats=True)
-            with obs.trace_span("ep", "barrier"):
-                y = jax.block_until_ready(y)
-            stats = {k: (float(v) if k == "dropped_frac" else int(v))
-                     for k, v in stats.items()}
+    while True:
+        try:
+            if plan is not None:
+                shard = plan.lost_shard("ep.round")
+                if shard is not None:
+                    raise ShardLossError(shard)
+            with obs.trace_span("ep", "round"):
+                with FinishScope(telemetry):
+                    obs.instant("ep", "round_posted")
+                    telemetry.record_exchange(posted=1)
+                    with obs.trace_span("ep", "launch"):
+                        y, stats = ep_dispatch_combine(
+                            p, cfg, x, mesh=mesh, use_kernel=use_kernel,
+                            impl=impl, return_stats=True,
+                            dead_shards=tuple(sorted(dead)))
+                    with obs.trace_span("ep", "barrier"):
+                        y = jax.block_until_ready(y)
+                    stats = {k: (float(v) if k == "dropped_frac"
+                                 else int(v))
+                             for k, v in stats.items()}
+            break
+        except ShardLossError as e:
+            sh = int(getattr(e, "shard", -1))
+            if sh in dead or (S is not None and len(dead) + 1 >= S):
+                raise  # same shard twice, or no live shard left
+            dead.add(sh)
+            telemetry.record_retry("ep.round")
+            obs.instant("sched", "retry", args={"site": "ep.round"})
     obs.instant("ep", "round_completed")
     with telemetry.lock:
         telemetry.spawns += stats["spawns"]
@@ -258,5 +314,9 @@ def ep_round(p: dict, cfg, x, *, mesh,
     telemetry.record_exchange(
         sent=stats["sent"], received=stats["received"],
         reassigned=stats["reassigned"], dropped=stats["dropped"],
-        completed=1)
+        completed=1, degraded=1 if dead else 0)
+    # scalar stats only (benches/tests cast every value): degraded is a
+    # 0/1 flag, dead_shards the count of lanes closed this round
+    stats["degraded"] = int(bool(dead))
+    stats["dead_shards"] = len(dead)
     return y, stats

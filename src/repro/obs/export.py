@@ -34,11 +34,13 @@ from . import trace as _trace
 #: instant-event names whose weights must reconcile with the
 #: SchedTelemetry counter of the same name (the conservation contract)
 COUNTER_EVENTS = ("spawns", "joins", "steals", "splits", "completions",
-                  "errors")
+                  "errors", "cancelled", "retries", "worker_deaths")
 #: instant name (singular, as emitted) → telemetry summary key
 _EVENT_TO_COUNTER = {
     "spawn": "spawns", "join": "joins", "steal": "steals",
     "split": "splits", "complete": "completions", "error": "errors",
+    "cancel": "cancelled", "retry": "retries",
+    "worker_death": "worker_deaths",
 }
 #: span categories counted as worker *busy* time (occupancy numerator);
 #: these spans never nest within each other by construction
@@ -111,6 +113,21 @@ def counts_from_chrome(doc_or_events) -> Dict[str, int]:
         if key is not None:
             counts[key] += int(e.get("args", {}).get("n", 1))
     return counts
+
+
+def errors_by_site_from_chrome(doc_or_events) -> Dict[str, int]:
+    """Per-site error counts re-derived from the ``error`` instants'
+    ``site`` args — the error-instant conservation side of
+    ``SchedTelemetry.errors_by_site``.  Events without a site (legacy
+    traces) land under ``"?"``."""
+    out: Dict[str, int] = {}
+    for e in _trace_events(doc_or_events):
+        if e.get("ph") != "i" or e.get("name") != "error":
+            continue
+        args = e.get("args") or {}
+        site = args.get("site", "?")
+        out[site] = out.get(site, 0) + int(args.get("n", 1))
+    return out
 
 
 def exchange_counts_from_chrome(doc_or_events) -> Dict[str, int]:
@@ -196,6 +213,15 @@ def crosscheck(doc_or_events, telemetry_summary: Dict[str, Any]
         checked[key] = want
         if got != want:
             mismatches.append(f"{key}: trace={got} telemetry={want}")
+    by_site = telemetry_summary.get("errors_by_site")
+    if by_site:
+        got_site = errors_by_site_from_chrome(doc_or_events)
+        for site, want in sorted(by_site.items()):
+            checked[f"errors_by_site.{site}"] = want
+            if got_site.get(site, 0) != int(want):
+                mismatches.append(f"errors_by_site.{site}: "
+                                  f"trace={got_site.get(site, 0)} "
+                                  f"telemetry={want}")
     ex = telemetry_summary.get("exchange")
     if ex:
         got_ex = exchange_counts_from_chrome(doc_or_events)

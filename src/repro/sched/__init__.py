@@ -20,6 +20,10 @@ every execution surface in the repo:
 * :mod:`repro.sched.tenancy` — multi-tenant admission: per-tenant
   queues (``TenantRegistry``) and weighted deficit-round-robin refill
   (``WeightedRefillPolicy``, ``"wdlbc"``) over one slot executor;
+* :mod:`repro.sched.faults` — seeded deterministic fault injection
+  (``FaultPlan``: raise / slow / worker-death / shard-loss) behind a
+  default-off hook, and bounded retries with deterministic backoff
+  (``RetryPolicy``) — the paper's exception extension made testable;
 * :mod:`repro.sched.telemetry` — Fig. 10-style spawn/join counters plus
   latency distributions (p50/p99) emitted as JSON for the benchmarks.
 
@@ -43,8 +47,13 @@ from .tenancy import (  # noqa: F401
     TenantQueue, TenantRegistry, WeightedRefillPolicy, ensure_weighted,
 )
 from .executors import (  # noqa: F401
-    FinishScope, RangeLatch, RangeTask, SlotExecutor, ThreadExecutor,
+    CancelToken, FinishScope, JoinOutcome, MultipleExceptions, RangeLatch,
+    RangeTask, SlotExecutor, TaskError, TaskEvent, ThreadExecutor,
     WorkStealingExecutor,
+)
+from .faults import (  # noqa: F401
+    FaultPlan, FaultSpec, InjectedFault, RetryPolicy, ShardLossError,
+    WorkerDeath, injected_faults,
 )
 from .telemetry import (  # noqa: F401
     ExchangeCounters, LogHistogram, SchedCounters, SchedTelemetry,

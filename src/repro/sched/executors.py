@@ -23,11 +23,14 @@ import queue
 import random
 import threading
 import time
+import traceback
 from collections import deque
+from dataclasses import dataclass
 from itertools import count
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..obs import trace as obs
+from . import faults
 from .capacity import PoolCapacity, SlotCapacity
 from .policy import GrainPlan, SchedPolicy, get_policy
 from .telemetry import SchedTelemetry
@@ -42,23 +45,129 @@ from .tenancy import TenantRegistry, ensure_weighted
 # single module-flag read when tracing is disabled.
 
 
+#: Max TaskErrors *stored* per waitable (latch / task event).  Counts
+#: stay exact past the cap — ``MultipleExceptions.count`` and the
+#: injected == collected gates never saturate — only the retained
+#: exemplar objects are bounded, so an error storm cannot OOM the join.
+_ERROR_CAP = 256
+
+
+@dataclass
+class TaskError:
+    """One collected task/item failure: the cause plus where it ran —
+    the per-task record a :class:`MultipleExceptions` aggregates (X10
+    finish semantics: every finish knows *which* asyncs failed)."""
+
+    exc: BaseException
+    site: str = "sched.item"
+    worker: Optional[int] = None
+    lo: int = -1
+    hi: int = -1
+    tb: str = ""
+
+    def summary(self) -> str:
+        where = f"[{self.lo},{self.hi})" if self.lo >= 0 else "?"
+        w = f"w{self.worker}" if self.worker is not None else "caller"
+        return (f"{type(self.exc).__name__}({self.exc}) at {self.site} "
+                f"{where} on {w}")
+
+
+class MultipleExceptions(RuntimeError):
+    """The aggregate a finish rethrows (X10 ``MultipleExceptions``):
+    every exception of every transitively spawned task — across helped,
+    stolen, and split ranges — with per-task cause, chunk range, and
+    worker id.  ``count`` is exact even when the stored ``errors`` list
+    was capped at ``_ERROR_CAP``."""
+
+    def __init__(self, errors: Sequence[TaskError],
+                 count: Optional[int] = None):
+        self.errors: List[TaskError] = list(errors)
+        self.count = int(count) if count is not None else len(self.errors)
+        first = self.errors[0].summary() if self.errors else "?"
+        super().__init__(f"{self.count} task exception(s); first: {first}")
+        if self.errors:
+            self.__cause__ = self.errors[0].exc
+
+
+class TaskCancelled(Exception):
+    """Internal unwind signal: a running chunk observed its scope's
+    :class:`CancelToken` and stopped early.  Never escapes the executor
+    — the worker counts the task cancelled, not completed."""
+
+
+class CancelToken:
+    """Cooperative cancellation flag threaded through chunk execution
+    (``fail_fast``): the first collected error trips it, sibling chunks
+    observe it at their next item boundary and skip the rest."""
+
+    __slots__ = ("_event",)
+
+    def __init__(self):
+        self._event = threading.Event()
+
+    def cancel(self):
+        self._event.set()
+
+    def cancelled(self) -> bool:
+        return self._event.is_set()
+
+
+def _collect_errors(events: Sequence[Any]) -> Tuple[List[TaskError], int]:
+    """Gather collected TaskErrors (exact count, capped storage) from a
+    set of joined waitables."""
+    errors: List[TaskError] = []
+    total = 0
+    for ev in events:
+        errs = getattr(ev, "errors", None)
+        if errs:
+            errors.extend(errs)
+            total += getattr(ev, "error_count", len(errs))
+    return errors[:_ERROR_CAP], total
+
+
+class TaskEvent(threading.Event):
+    """Per-task done event that also carries the task's collected
+    errors.  A task runs on exactly one worker, so recording needs no
+    lock beyond the GIL."""
+
+    def __init__(self):
+        super().__init__()
+        self.errors: List[TaskError] = []
+        self.error_count = 0
+
+    def record_error(self, err: TaskError):
+        self.error_count += 1
+        if len(self.errors) < _ERROR_CAP:
+            self.errors.append(err)
+
+
 class RangeLatch:
     """Countdown latch for one submitted range: fires once every item of
     ``[lo, hi)`` has executed, across however many steal-splits the range
     underwent.  Event-compatible (``wait``/``is_set``) so
     :class:`FinishScope` and ``run_loop`` joins treat it exactly like the
-    per-task :class:`threading.Event` it coalesces — one waitable per
+    per-task :class:`TaskEvent` it coalesces — one waitable per
     submitted range instead of one per item, so DCAFE joins stay
-    O(ranges)."""
+    O(ranges).  Also the range's error sink: owner, thieves, and helpers
+    all record raising items here, so the join sees every failure no
+    matter which worker ran the item."""
 
-    __slots__ = ("_remaining", "_lock", "_event")
+    __slots__ = ("_remaining", "_lock", "_event", "errors", "error_count")
 
     def __init__(self, n_items: int):
         self._remaining = n_items
         self._lock = threading.Lock()
         self._event = threading.Event()
+        self.errors: List[TaskError] = []
+        self.error_count = 0
         if n_items <= 0:
             self._event.set()
+
+    def record_error(self, err: TaskError):
+        with self._lock:
+            self.error_count += 1
+            if len(self.errors) < _ERROR_CAP:
+                self.errors.append(err)
 
     def discharge(self, n: int):
         """Credit ``n`` executed items (workers call this once per drain
@@ -84,16 +193,21 @@ class RangeTask:
     time, a thief truncates ``hi`` to steal the back half.  All splits of
     a submitted range share one :class:`RangeLatch`."""
 
-    __slots__ = ("items", "fn", "lo", "hi", "latch", "split_min", "active")
+    __slots__ = ("items", "fn", "lo", "hi", "latch", "split_min", "active",
+                 "token")
 
     def __init__(self, items: Sequence, fn: Callable, lo: int, hi: int,
-                 latch: RangeLatch, split_min: int = 2):
+                 latch: RangeLatch, split_min: int = 2,
+                 token: Optional[CancelToken] = None):
         self.items = items
         self.fn = fn
         self.lo = lo
         self.hi = hi
         self.latch = latch
         self.split_min = max(2, split_min)
+        #: the owning scope's fail_fast cancel token (None = run to
+        #: completion); splits inherit it with the latch
+        self.token = token
         #: True while an owning worker's drain session holds this task
         #: (set/read only under the holding deque's lock).  A helper may
         #: take the last item of — and remove — only *inactive* tasks;
@@ -108,33 +222,119 @@ class RangeTask:
             fn(self.items[j])
 
 
+@dataclass(frozen=True)
+class JoinOutcome:
+    """Typed result of :meth:`FinishScope.wait`: distinguishes "timed
+    out" (work still in flight — the scope is NOT discharged, re-wait or
+    abandon explicitly) from "done with failures" (every task finished,
+    some raised) from a clean finish."""
+
+    status: str  # "done" | "failed" | "timeout"
+    errors: Tuple[TaskError, ...] = ()
+    error_count: int = 0
+    pending: int = 0  # unfired waitables (timeout only)
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    @property
+    def failed(self) -> bool:
+        return self.status == "failed"
+
+    @property
+    def timed_out(self) -> bool:
+        return self.status == "timeout"
+
+    def raise_if_failed(self) -> "JoinOutcome":
+        if self.status == "failed":
+            raise MultipleExceptions(list(self.errors), self.error_count)
+        if self.status == "timeout":
+            raise TimeoutError(
+                f"finish scope timed out with {self.pending} waitable(s) "
+                "still pending")
+        return self
+
+
+#: FinishScope failure semantics (the paper's exception extension):
+#: ``run_to_completion`` attempts every spawned item and aggregates all
+#: failures at the join; ``fail_fast`` trips a CancelToken on the first
+#: failure so sibling chunks skip their remaining items (skipped work is
+#: accounted: spawns == completions + cancelled).
+FAIL_MODES = ("run_to_completion", "fail_fast")
+
+
 class FinishScope:
     """Collects escaped joins (DCAFE): ``with executor.finish() as f:``
     runs many loops but performs ONE join at scope exit.  Holds any
-    waitable with Event semantics — per-task events from the FIFO pool,
-    per-range :class:`RangeLatch`\\ es from the work-stealing pool."""
+    waitable with Event semantics — per-task :class:`TaskEvent`\\ s from
+    the FIFO pool, per-range :class:`RangeLatch`\\ es from the
+    work-stealing pool.
 
-    def __init__(self, telemetry: Optional[SchedTelemetry] = None):
+    Exception contract (X10 finish semantics): the scope collects the
+    exceptions of ALL transitively spawned tasks — including helped,
+    stolen, and split ranges — and :meth:`join` rethrows them as ONE
+    :class:`MultipleExceptions`.  AFE may move *where* the join happens;
+    it never changes *whether* an exception surfaces."""
+
+    def __init__(self, telemetry: Optional[SchedTelemetry] = None,
+                 fail_mode: str = "run_to_completion"):
+        if fail_mode not in FAIL_MODES:
+            raise ValueError(f"fail_mode {fail_mode!r} not in {FAIL_MODES}")
         self._events: List[Any] = []
         self.telemetry = telemetry
+        self.fail_mode = fail_mode
+        #: fail_fast: the token sibling chunks poll; the first recorded
+        #: error cancels it.  None in run_to_completion mode.
+        self.token: Optional[CancelToken] = (
+            CancelToken() if fail_mode == "fail_fast" else None)
 
     def add(self, events: Sequence[Any]):
         self._events.extend(events)
 
-    def join(self):
+    def wait(self, timeout: Optional[float] = None) -> JoinOutcome:
+        """Join with a deadline and a typed outcome.  On timeout the
+        scope keeps its events (nothing is discharged, no join is
+        counted) so the caller can re-wait, cancel, or abandon with full
+        knowledge; on completion the join is counted once and any
+        collected task errors are returned (not raised — that is
+        :meth:`join`)."""
+        deadline = (time.perf_counter() + timeout
+                    if timeout is not None else None)
         with obs.trace_span("sched", "join_stall"):
             for ev in self._events:
-                ev.wait()
+                if deadline is None:
+                    ev.wait()
+                else:
+                    left = deadline - time.perf_counter()
+                    if left <= 0 or not ev.wait(max(0.0, left)):
+                        pending = sum(1 for e in self._events
+                                      if not e.is_set())
+                        return JoinOutcome("timeout", pending=pending)
+        errors, total = _collect_errors(self._events)
         self._events.clear()
         if self.telemetry is not None:
             with self.telemetry.lock:
                 self.telemetry.joins += 1
             obs.instant("sched", "join")
+        if total:
+            return JoinOutcome("failed", tuple(errors), total)
+        return JoinOutcome("done")
+
+    def join(self):
+        """The finish: wait for everything, then rethrow collected task
+        exceptions as one :class:`MultipleExceptions`."""
+        self.wait().raise_if_failed()
 
     def __enter__(self):
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            # an exception is already in flight: still quiesce (tasks
+            # must not outlive the scope) but never mask the original
+            self.wait()
+            return False
         self.join()
         return False
 
@@ -177,6 +377,38 @@ class ThreadExecutor:
         for t in self._threads:
             t.start()
 
+    # -- error / fault plumbing ----------------------------------------------
+
+    def _record_error(self, exc: BaseException, sink: Optional[Any], *,
+                      site: str = "sched.item",
+                      worker: Optional[int] = None,
+                      lo: int = -1, hi: int = -1,
+                      token: Optional[CancelToken] = None):
+        """One raising item/task: collect it into the joining waitable
+        (``sink.record_error``) so the finish rethrows it, count it in
+        telemetry (with the per-site breakdown and the first traceback),
+        emit the matching ``sched.error`` instant, and — fail_fast —
+        trip the scope's cancel token."""
+        tb = traceback.format_exc()
+        if sink is not None:
+            sink.record_error(TaskError(exc=exc, site=site, worker=worker,
+                                        lo=lo, hi=hi, tb=tb))
+        self.telemetry.record_error(site, tb)
+        obs.instant("sched", "error", args={"site": site})
+        if token is not None:
+            token.cancel()
+
+    def _on_death(self):
+        """A worker thread was told to die (fault injection): the pool
+        shrinks permanently — idle accounting loses the seat, telemetry
+        counts the death.  The shared FIFO queue means no work is lost:
+        peers drain whatever the dead worker would have run."""
+        with self._idle_lock:
+            self._idle -= 1
+        with self.telemetry.lock:
+            self.telemetry.worker_deaths += 1
+        obs.instant("sched", "worker_death")
+
     # -- worker loop ---------------------------------------------------------
 
     def _worker(self):
@@ -184,37 +416,54 @@ class ThreadExecutor:
             item = self._q.get()
             if item is None:
                 return
-            fn, done = item
+            plan = faults.active()
+            if plan is not None and plan.should_die("sched.worker"):
+                self._q.put(item)  # re-queue: the claimed task is not lost
+                self._on_death()
+                return
+            # legacy producers (tests, external pokes) enqueue (fn, done);
+            # _submit adds the scope's cancel token as a third element
+            fn, done, *rest = item
+            token = rest[0] if rest else None
+            outcome = "complete"
             with self._idle_lock:
                 self._idle -= 1
             try:
                 with obs.trace_span("worker", "task"):
                     fn()
-            except Exception:
+            except TaskCancelled:
+                # the chunk observed its scope's token and stopped early
+                # (item accounting happened at the observation site)
+                outcome = "cancel"
+            except Exception as e:
                 # Contain task exceptions: the worker thread survives, the
                 # done event still fires, so joins (and FinishScope) never
-                # hang on a raising task.  Uncontained, the exception would
-                # silently kill the thread and shrink the pool forever.
-                with self.telemetry.lock:
-                    self.telemetry.errors += 1
-                obs.instant("sched", "error")
+                # hang on a raising task — and the error is COLLECTED into
+                # the task's event, so the join rethrows it (X10 finish
+                # semantics), never swallows it.
+                self._record_error(e, done, site="sched.task", token=token)
             finally:
                 with self._idle_lock:
                     self._idle += 1
                 with self.telemetry.lock:
-                    self.telemetry.completions += 1
-                obs.instant("sched", "complete")
+                    if outcome == "cancel":
+                        self.telemetry.cancelled += 1
+                    else:
+                        self.telemetry.completions += 1
+                obs.instant("sched", outcome)
                 done.set()
 
-    def _submit(self, fn: Callable[[], None]) -> threading.Event:
-        ev = threading.Event()
+    def _submit(self, fn: Callable[[], None],
+                token: Optional[CancelToken] = None,
+                ev: Optional[TaskEvent] = None) -> TaskEvent:
+        ev = ev if ev is not None else TaskEvent()
         with self.telemetry.lock:
             self.telemetry.spawns += 1
         obs.instant("sched", "spawn")
-        self._q.put((fn, ev))
+        self._q.put((fn, ev, token))
         return ev
 
-    def submit(self, fn: Callable[[], None]) -> threading.Event:
+    def submit(self, fn: Callable[[], None]) -> TaskEvent:
         """Public single-task entry point (dispatches through the
         subclass's ``_submit``); same spawn accounting as ``run_loop``."""
         return self._submit(fn)
@@ -226,9 +475,11 @@ class ThreadExecutor:
         for _ in self._threads:
             self._q.put(None)
 
-    def finish(self) -> FinishScope:
-        """Open a DCAFE finish scope for escaped joins."""
-        return FinishScope(self.telemetry)
+    def finish(self, fail_mode: str = "run_to_completion") -> FinishScope:
+        """Open a DCAFE finish scope for escaped joins.  ``fail_mode``
+        picks the exception semantics: aggregate everything at the join
+        (default) or cancel sibling chunks on first failure."""
+        return FinishScope(self.telemetry, fail_mode=fail_mode)
 
     # -- grain: how a planned chunk becomes spawned tasks --------------------
 
@@ -239,28 +490,39 @@ class ThreadExecutor:
         return GrainPlan(initial=self.chunk_grain)
 
     def _spawn_range(self, items: Sequence, fn: Callable, lo: int, hi: int,
-                     grain: GrainPlan) -> List[Any]:
+                     grain: GrainPlan,
+                     token: Optional[CancelToken] = None) -> List[Any]:
         """Spawn ``[lo, hi)`` as tasks of at most ``grain.initial`` items;
-        returns the waitables the join (or finish scope) collects."""
+        returns the waitables the join (or finish scope) collects.  A
+        raising item is recorded into its task's event (the join
+        rethrows it); the rest of the chunk still runs unless ``token``
+        trips, in which case the remaining items are skipped and counted
+        cancelled."""
         t = self.telemetry
         step = grain.initial or (hi - lo)
         events = []
         for a in range(lo, hi, step):
             b = min(a + step, hi)
+            ev = TaskEvent()
 
-            def task(a=a, b=b):
+            def task(a=a, b=b, ev=ev):
+                plan = faults.active()
                 for j in range(a, b):
+                    if token is not None and token.cancelled():
+                        t.record_cancelled(items=b - j)
+                        raise TaskCancelled()
                     t0 = time.perf_counter()
                     try:
+                        if plan is not None:
+                            plan.poke("sched.item")
                         fn(items[j])
-                    except Exception:
-                        with t.lock:
-                            t.errors += 1
-                        obs.instant("sched", "error")
+                    except Exception as e:
+                        self._record_error(e, ev, site="sched.item",
+                                           lo=j, hi=j + 1, token=token)
                     finally:
                         t.record_latency(time.perf_counter() - t0)
 
-            events.append(self._submit(task))
+            events.append(self._submit(task, token=token, ev=ev))
         return events
 
     def _join(self, events: Sequence[Any]) -> None:
@@ -280,12 +542,19 @@ class ThreadExecutor:
         chunk here, join — or escape the join into ``scope`` for DCAFE)
         or the serial arm (one item at a time, re-probing capacity).
 
-        Exception contract: every SPAWNED item is attempted — an item
-        whose ``fn`` raises is counted in ``telemetry.errors`` and the
-        rest of its chunk still runs (without per-item containment a
-        raise would silently drop the chunk's remaining items).  Items
-        executed on the CALLING thread (the caller's chunk, the serial
-        block) propagate like a plain ``for`` loop.
+        Exception contract (the paper's exception extension): every
+        SPAWNED item is attempted — an item whose ``fn`` raises is
+        counted in ``telemetry.errors``, COLLECTED into its task's
+        waitable, and the rest of its chunk still runs (without per-item
+        containment a raise would silently drop the chunk's remaining
+        items); the per-loop join then rethrows everything as one
+        :class:`MultipleExceptions`, or — DCAFE — the failures travel
+        with the escaped join and surface at ``scope.join()``.  A
+        ``fail_fast`` scope's :class:`CancelToken` makes sibling chunks
+        (and the caller/serial arms) skip their remaining items instead,
+        counted in ``cancelled_items``.  Items executed on the CALLING
+        thread (the caller's chunk, the serial block) propagate like a
+        plain ``for`` loop.
         """
         if policy is None or isinstance(policy, str):
             key = policy or "dlbc"
@@ -296,6 +565,7 @@ class ThreadExecutor:
         else:
             policy = get_policy(policy)
         t = self.telemetry
+        token = scope.token if scope is not None else None
         n = len(items)
         i = 0
 
@@ -316,7 +586,8 @@ class ThreadExecutor:
                 grain = self._grain_plan(n - i, policy)
                 events = []
                 for lo, hi in plan.spawned:
-                    events.extend(self._spawn_range(items, fn, lo, hi, grain))
+                    events.extend(self._spawn_range(items, fn, lo, hi,
+                                                    grain, token=token))
                     with t.lock:
                         t.parallel_items += hi - lo
                 # parent block: the caller's (smallest) chunk.  Caller
@@ -324,13 +595,18 @@ class ThreadExecutor:
                 # so the per-item telemetry is batched outside the lock.
                 ca, cb = plan.caller
                 if cb > ca:
+                    ran = 0
                     with obs.trace_span("worker", "caller"):
                         for j in range(ca, cb):
+                            if token is not None and token.cancelled():
+                                t.record_cancelled(items=cb - j)
+                                break
                             t0 = time.perf_counter()
                             fn(items[j])
                             t.record_latency(time.perf_counter() - t0)
+                            ran += 1
                     with t.lock:
-                        t.parallel_items += cb - ca
+                        t.parallel_items += ran
                 if policy.escape_join and scope is not None:
                     scope.add(events)  # DCAFE: join escapes to the scope
                 else:
@@ -339,6 +615,9 @@ class ThreadExecutor:
                     with t.lock:
                         t.joins += 1
                     obs.instant("sched", "join")
+                    errors, total = _collect_errors(events)
+                    if total:  # the per-loop finish rethrows (X10)
+                        raise MultipleExceptions(errors, total)
                 return
             # serial block with periodic capacity re-probe (cadence counts
             # items processed in THIS block, not the absolute index)
@@ -347,6 +626,9 @@ class ThreadExecutor:
             done_in_block = 0
             with obs.trace_span("worker", "serial"):
                 while i < n:
+                    if token is not None and token.cancelled():
+                        t.record_cancelled(items=n - i)
+                        return
                     run_item(i, serial=True)
                     i += 1
                     done_in_block += 1
@@ -404,9 +686,11 @@ class WorkStealingExecutor(ThreadExecutor):
 
     Counter contract (all bumps under ``telemetry.lock``): ``spawns``
     counts task creations (submits + splits), ``completions`` counts
-    tasks drained to exhaustion — ``spawns == completions`` at
-    quiescence; ``steals`` counts successful steals (``splits`` of them
-    split a range; ``steal_victims`` histograms who they hit).
+    tasks drained to exhaustion, ``cancelled`` counts tasks whose
+    remainder was skipped by a fail_fast token — ``spawns ==
+    completions + cancelled`` at quiescence; ``steals`` counts
+    successful steals (``splits`` of them split a range;
+    ``steal_victims`` histograms who they hit).
     """
 
     #: ``None`` = adaptive: ranges are carved per the policy's
@@ -424,27 +708,46 @@ class WorkStealingExecutor(ThreadExecutor):
         self._park_lock = threading.Lock()
         self._park_events = [threading.Event() for _ in range(n_workers)]
         self._parked: set = set()
+        #: workers that died (fault injection).  A worker adds itself
+        #: under its OWN deque lock before sweeping orphans, and
+        #: placement checks membership under that same lock — so a task
+        #: either lands before the sweep (and is swept to a live deque)
+        #: or sees the death and picks another victim.  Never stranded.
+        self._dead: set = set()
         super().__init__(n_workers, telemetry)
 
     # -- submission ----------------------------------------------------------
 
+    def _place_on(self, task: RangeTask) -> int:
+        """Round-robin the task onto a LIVE worker's deque (no wakeup —
+        the caller batches unparks); returns the chosen worker."""
+        for _ in range(2 * self.n_workers):
+            v = next(self._rr) % self.n_workers
+            with self._locks[v]:
+                if v in self._dead:
+                    continue
+                self._deques[v].append(task)
+                return v
+        raise RuntimeError("no live workers left to place work on")
+
     def _place(self, task: RangeTask):
-        """Round-robin a task onto a worker deque and wake someone —
-        preferably that deque's owner, so work does not sit in a parked
-        worker's deque until another worker happens to scan it."""
-        v = next(self._rr) % self.n_workers
-        with self._locks[v]:
-            self._deques[v].append(task)
+        """Place a task and wake someone — preferably that deque's
+        owner, so work does not sit in a parked worker's deque until
+        another worker happens to scan it."""
+        v = self._place_on(task)
         self._unpark(prefer=v)
 
-    def _submit(self, fn: Callable[[], None]) -> RangeLatch:
+    def _submit(self, fn: Callable[[], None],
+                token: Optional[CancelToken] = None,
+                ev: Optional[TaskEvent] = None) -> RangeLatch:
         """Single-callable entry point (``submit``/base helpers): a
-        one-item range."""
+        one-item range.  (``ev`` is the FIFO pool's premade-event hook;
+        ranges collect errors in their latch instead, so it is unused.)"""
         latch = RangeLatch(1)
         with self.telemetry.lock:
             self.telemetry.spawns += 1
         obs.instant("sched", "spawn")
-        self._place(RangeTask(None, fn, 0, 1, latch))
+        self._place(RangeTask(None, fn, 0, 1, latch, token=token))
         return latch
 
     def _grain_plan(self, n: int, policy: SchedPolicy) -> GrainPlan:
@@ -452,7 +755,8 @@ class WorkStealingExecutor(ThreadExecutor):
             return GrainPlan(initial=self.chunk_grain)
         return policy.grain_plan(n, self.capacity, self.telemetry)
 
-    def _spawn_range(self, items, fn, lo, hi, grain: GrainPlan):
+    def _spawn_range(self, items, fn, lo, hi, grain: GrainPlan,
+                     token: Optional[CancelToken] = None):
         """Carve ``[lo, hi)`` into initial ranges and place them in one
         wave: one spawn-counter bump, one deque push per range, then one
         unpark sweep — the submit path is O(ranges), not O(items)."""
@@ -461,27 +765,47 @@ class WorkStealingExecutor(ThreadExecutor):
         for a in range(lo, hi, step):
             b = min(a + step, hi)
             tasks.append(RangeTask(items, fn, a, b, RangeLatch(b - a),
-                                   grain.split_min))
+                                   grain.split_min, token=token))
         with self.telemetry.lock:
             self.telemetry.spawns += len(tasks)
         obs.instant("sched", "spawn", n=len(tasks))
         owners = set()
         for task in tasks:
-            v = next(self._rr) % self.n_workers
-            with self._locks[v]:
-                self._deques[v].append(task)
-            owners.add(v)
+            owners.add(self._place_on(task))
         for v in owners:
             self._unpark(prefer=v)
         return [task.latch for task in tasks]
 
     # -- worker loop ---------------------------------------------------------
 
+    def _on_death(self, w: int):
+        """This worker dies (fault injection): mark the deque dead under
+        its own lock (closing the placement race — see ``_dead``), sweep
+        any queued tasks to live deques, release the idle seat, and wake
+        everyone so the swept work is picked up."""
+        lock, dq = self._locks[w], self._deques[w]
+        with lock:
+            self._dead.add(w)
+            orphans = list(dq)
+            dq.clear()
+        with self._idle_lock:
+            self._idle -= 1
+        with self.telemetry.lock:
+            self.telemetry.worker_deaths += 1
+        obs.instant("sched", "worker_death")
+        for task in orphans:
+            self._place_on(task)
+        self._unpark(all_workers=True)
+
     def _worker(self):
         w = self._threads.index(threading.current_thread())
         rng = random.Random(0x5EED ^ (w * 0x9E3779B9))
         attempts = 0
         while True:
+            plan = faults.active()
+            if plan is not None and plan.should_die("sched.worker"):
+                self._on_death(w)
+                return
             if self._drain_own(w):
                 attempts = 0
                 continue
@@ -525,42 +849,59 @@ class WorkStealingExecutor(ThreadExecutor):
     def _drain_task(self, w: int, task: RangeTask):
         """One drain session: claim items off the front of ``task`` (our
         deque's front, which only we ever pop) until it is exhausted —
-        naturally or by thieves truncating ``hi`` — then pop it and
-        credit its latch once with everything we ran."""
+        naturally, by thieves truncating ``hi``, or by its scope's
+        cancel token tripping (the remainder is skipped and counted
+        cancelled) — then pop it and credit its latch once with
+        everything we ran or skipped."""
         lock, dq = self._locks[w], self._deques[w]
+        token = task.token
         ran = 0
+        skipped = 0
         try:
             with obs.trace_span("worker", "drain"):
                 while True:
                     with lock:
+                        if (token is not None and token.cancelled()
+                                and task.lo < task.hi):
+                            skipped = task.hi - task.lo
+                            task.lo = task.hi
                         if task.lo >= task.hi:
                             dq.popleft()  # ours: helpers skip active
                             return        # tasks' last items, thieves
                             #               never pop front
                         j = task.lo
                         task.lo = j + 1
-                    self._run_item(task, j)
+                    self._run_item(task, j, w)
                     ran += 1
         finally:
             # completions before the latch: a joiner woken by the final
-            # discharge must already observe spawns == completions
+            # discharge must already observe spawns == completions +
+            # cancelled
             with self.telemetry.lock:
-                self.telemetry.completions += 1
-            obs.instant("sched", "complete")
-            task.latch.discharge(ran)
+                if skipped:
+                    self.telemetry.cancelled += 1
+                    self.telemetry.cancelled_items += skipped
+                else:
+                    self.telemetry.completions += 1
+            obs.instant("sched", "cancel" if skipped else "complete")
+            task.latch.discharge(ran + skipped)
 
-    def _run_item(self, task: RangeTask, j: int):
+    def _run_item(self, task: RangeTask, j: int, w: Optional[int] = None):
         t = self.telemetry
         t0 = time.perf_counter()
         try:
+            if task.items is not None:
+                plan = faults.active()
+                if plan is not None:
+                    plan.poke("sched.item")
             task.run(j)
-        except Exception:
+        except Exception as e:
             # same containment contract as ThreadExecutor._worker: the
             # worker survives, the claimed item still counts, the latch
-            # still fires
-            with t.lock:
-                t.errors += 1
-            obs.instant("sched", "error")
+            # still fires — and carries the error to the join, wherever
+            # the item ran (owner, thief, or helper)
+            self._record_error(e, task.latch, site="sched.item",
+                               worker=w, lo=j, hi=j + 1, token=task.token)
         finally:
             t.record_latency(time.perf_counter() - t0)
 
@@ -620,20 +961,50 @@ class WorkStealingExecutor(ThreadExecutor):
             if not self._deques[v]:  # racy peek
                 continue
             lock, dq = self._locks[v], self._deques[v]
+            cancel_claim = None
             with lock:
                 best, best_sz = None, 0
                 for task in dq:
+                    tok = task.token
+                    if (tok is not None and tok.cancelled()
+                            and task.hi > task.lo):
+                        # fail_fast: consume the whole remainder as
+                        # cancelled so a join never stalls on work
+                        # nobody should run (a parked owner's inactive
+                        # cancelled task would otherwise sit forever)
+                        skipped = task.hi - task.lo
+                        task.lo = task.hi
+                        removed = not task.active
+                        if removed:
+                            dq.remove(task)
+                        cancel_claim = (task, skipped, removed)
+                        break
                     sz = task.hi - task.lo
                     if sz > best_sz and (sz >= 2 or not task.active):
                         best, best_sz = task, sz
-                if best is None:
+                if cancel_claim is None and best is None:
                     continue
-                take = min(batch, best_sz - 1 if best.active else best_sz)
-                j = best.lo
-                best.lo = j + take
-                removed = best.lo >= best.hi and not best.active
+                if cancel_claim is None:
+                    take = min(batch,
+                               best_sz - 1 if best.active else best_sz)
+                    j = best.lo
+                    best.lo = j + take
+                    removed = best.lo >= best.hi and not best.active
+                    if removed:
+                        dq.remove(best)
+            if cancel_claim is not None:
+                task, skipped, removed = cancel_claim
+                with self.telemetry.lock:
+                    self.telemetry.cancelled_items += skipped
+                    if removed:
+                        # the task dies here; an active task's owner
+                        # session still counts it (as a completion of
+                        # its emptied range)
+                        self.telemetry.cancelled += 1
                 if removed:
-                    dq.remove(best)
+                    obs.instant("sched", "cancel")
+                task.latch.discharge(skipped)
+                return True
             for jj in range(j, j + take):
                 self._run_item(best, jj)
             if removed:
@@ -705,7 +1076,8 @@ class WorkStealingExecutor(ThreadExecutor):
                 # owner (who is already consuming lo forward)
                 mid = best.lo + (best.hi - best.lo + 1) // 2
                 stolen = RangeTask(best.items, best.fn, mid, best.hi,
-                                   best.latch, best.split_min)
+                                   best.latch, best.split_min,
+                                   token=best.token)
                 best.hi = mid
                 return stolen, True
             if len(dq) >= 2:

@@ -181,6 +181,8 @@ class ExchangeCounters:
     dropped: int = 0      # pairs no shard had capacity for
     posted: int = 0       # rounds whose collectives were launched
     completed: int = 0    # rounds whose barrier landed (each = one join)
+    degraded_rounds: int = 0  # rounds that ran with >= 1 dead shard
+    #                           (its lanes rerouted to live shards)
 
     @property
     def rounds(self) -> int:
@@ -193,10 +195,13 @@ class ExchangeCounters:
         return self.posted - self.completed
 
     def summary(self) -> Dict[str, int]:
-        return dict(sent=self.sent, received=self.received,
-                    reassigned=self.reassigned, dropped=self.dropped,
-                    posted=self.posted, completed=self.completed,
-                    rounds=self.rounds)
+        out = dict(sent=self.sent, received=self.received,
+                   reassigned=self.reassigned, dropped=self.dropped,
+                   posted=self.posted, completed=self.completed,
+                   rounds=self.rounds)
+        if self.degraded_rounds:
+            out["degraded_rounds"] = self.degraded_rounds
+        return out
 
 
 @dataclass
@@ -221,10 +226,31 @@ class SchedTelemetry(SchedCounters):
     #: worker 0.  Bumped under ``lock`` like every cross-thread counter.
     steal_victims: Dict[int, int] = field(default_factory=dict)
     completions: int = 0      # spawned tasks that finished (quiescence:
-    #                           completions == spawns once every join fired)
-    errors: int = 0           # spawned tasks that raised (contained by the
-    #                           worker — the thread survives, the done event
-    #                           still fires, the join never hangs)
+    #                           spawns == completions + cancelled once every
+    #                           join fired)
+    errors: int = 0           # items/tasks that raised (collected into the
+    #                           joining scope's MultipleExceptions — the
+    #                           worker thread survives, the done event still
+    #                           fires, the join never hangs)
+    #: tasks skipped whole because their scope's CancelToken fired
+    #: (fail_fast) — spawns == completions + cancelled at quiescence.
+    cancelled: int = 0
+    #: individual loop items skipped by cancellation (the item-level
+    #: conservation side: intended items == executed + cancelled_items).
+    cancelled_items: int = 0
+    #: retry attempts consumed by a RetryPolicy (ckpt shards, serving
+    #: requests, EP rounds) — bumped via :meth:`record_retry`.
+    retries: int = 0
+    #: worker threads that died (fault injection / crash containment);
+    #: the executor redistributes the dead worker's queued work.
+    worker_deaths: int = 0
+    #: error counts keyed by emit site ("sched.item", "ckpt.shard",
+    #: "serve.request", ...) — sums to ``errors``, so the obs crosscheck
+    #: can gate error-instant conservation per site.
+    errors_by_site: Dict[str, int] = field(default_factory=dict)
+    #: first traceback string seen (the silent-swallow fix: one exemplar
+    #: survives even where the raise site only counted before).
+    first_error: Optional[str] = None
     #: per-tenant spawn/join counters (multi-tenant serving); keys are
     #: tenant names, values share the Fig. 10 counter vocabulary.  The
     #: conservation invariant — sum of per-tenant spawns/joins equals the
@@ -277,6 +303,7 @@ class SchedTelemetry(SchedCounters):
     def record_exchange(self, *, sent: int = 0, received: int = 0,
                         reassigned: int = 0, dropped: int = 0,
                         posted: int = 0, completed: int = 0,
+                        degraded: int = 0,
                         rounds: Optional[int] = None):
         """Fold EP exchange counts in.  ``posted``/``completed`` are the
         round edges (a blocking round bumps both at once; the overlap
@@ -297,6 +324,33 @@ class SchedTelemetry(SchedCounters):
             ex.dropped += int(dropped)
             ex.posted += int(posted)
             ex.completed += int(completed)
+            ex.degraded_rounds += int(degraded)
+
+    def record_error(self, site: str, tb: Optional[str] = None):
+        """One raising item/task at ``site``: bumps ``errors`` and the
+        per-site breakdown under the lock, and keeps the FIRST traceback
+        (the silent-swallow fix — an exemplar always survives).  The
+        caller emits the matching ``sched.error`` instant (with
+        ``args={"site": ...}``) so trace == telemetry holds per site."""
+        with self.lock:
+            self.errors += 1
+            self.errors_by_site[site] = self.errors_by_site.get(site, 0) + 1
+            if self.first_error is None and tb:
+                self.first_error = tb
+
+    def record_retry(self, site: str):
+        """One retry attempt at ``site`` (the RetryPolicy calls this and
+        emits the matching ``sched.retry`` instant)."""
+        with self.lock:
+            self.retries += 1
+
+    def record_cancelled(self, tasks: int = 0, items: int = 0):
+        """Tasks skipped whole / items skipped inside a partially-run
+        chunk because the scope's CancelToken fired.  The caller emits
+        the matching ``sched.cancel`` instant (weight = tasks)."""
+        with self.lock:
+            self.cancelled += int(tasks)
+            self.cancelled_items += int(items)
 
     def record_latency(self, seconds: float):
         self.latencies.append(seconds)  # GIL-atomic, no lock on the hot path
@@ -349,11 +403,16 @@ class SchedTelemetry(SchedCounters):
             steals=self.steals,
             splits=self.splits,
             # quiescence invariant (gated from bench artifacts):
-            # completions == spawns once every join fired — a raising
-            # task still completes (containment), so errors is a subset
-            # of completions, not a complement
+            # spawns == completions + cancelled once every join fired —
+            # a raising task still completes (its exception is collected
+            # by the joining scope), so errors is a subset of
+            # completions, not a complement
             completions=self.completions,
             errors=self.errors,
+            cancelled=self.cancelled,
+            cancelled_items=self.cancelled_items,
+            retries=self.retries,
+            worker_deaths=self.worker_deaths,
             # serving chunked prefill: counted beside, never inside,
             # spawns/joins (AFE: one join per request, not per chunk)
             prefill_chunks=self.prefill_chunks,
@@ -363,6 +422,10 @@ class SchedTelemetry(SchedCounters):
             p99_ms=round(self.p99() * 1e3, 3),
             latency_hist=hist.summary(),
         )
+        if self.errors_by_site:  # only surfaces that saw errors grow it
+            out["errors_by_site"] = dict(sorted(self.errors_by_site.items()))
+        if self.first_error is not None:
+            out["first_error"] = self.first_error
         if self.steal_victims:  # only the work-stealing executor grows it
             out["steal_victims"] = {
                 str(w): c for w, c in sorted(self.steal_victims.items())
@@ -387,6 +450,10 @@ class SchedTelemetry(SchedCounters):
         self.work = 0.0
         self.serial_items = self.parallel_items = self.steals = 0
         self.splits = self.completions = self.errors = 0
+        self.cancelled = self.cancelled_items = 0
+        self.retries = self.worker_deaths = 0
+        self.errors_by_site = {}
+        self.first_error = None
         self.prefill_chunks = self.prefill_tokens = 0
         self.steal_victims = {}
         self.tenants = {}

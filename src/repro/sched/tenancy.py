@@ -58,6 +58,11 @@ class TenantQueue:
     deficit: float = 0.0
     #: lifetime admission count (slot-share accounting / tests)
     admitted: int = 0
+    #: per-tenant SLO deadline in decode steps (0 = none): the batcher
+    #: derives a request's expiry deadline and join timeout from this —
+    #: a request still running ``slo_steps`` after arrival is expired so
+    #: its slot frees for the tenant's queue instead of stalling it.
+    slo_steps: int = 0
 
     def __post_init__(self):
         if self.weight <= 0:

@@ -70,10 +70,23 @@ the decode launch plus the largest prefill chunk that shared it.
 token, so the per-token decode-latency distribution (and its p99)
 directly exposes how much prefill work stalled decoders — the SLO
 surface ``bench_tenants`` gates under a long-prompt adversary.
+
+Fault containment is PER REQUEST: a request that raises mid-serve (the
+``serve.request`` fault-injection site, or a failed prefill collected
+by its scope) frees its slot and is requeued under a bounded
+:class:`~repro.sched.faults.RetryPolicy` budget, then counted
+``ServeStats.failed`` — neighbouring slots keep decoding bitwise
+identically (pinned by ``tests/test_faults.py``).  Tenants may carry an
+SLO deadline (``slos=`` or ``TenantQueue.slo_steps``, in decode steps):
+requests still in-slot past it are evicted and counted ``expired``, and
+the request's one scope join uses a timeout derived from the same SLO
+(:class:`~repro.sched.executors.JoinOutcome` distinguishes "timed out"
+from "done with failures").
 """
 
 from __future__ import annotations
 
+import traceback
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -84,7 +97,9 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import model as MDL
 from ..obs import trace as obs
+from ..sched import faults
 from ..sched.executors import FinishScope, RangeLatch, SlotExecutor
+from ..sched.faults import RetryPolicy
 from ..sched.policy import SchedPolicy
 from ..sched.telemetry import percentile
 from ..sched.tenancy import TenantRegistry, WeightedRefillPolicy
@@ -100,6 +115,10 @@ class Request:
     done_step: Optional[int] = None
     tokens: list = field(default_factory=list)
     tenant: str = "default"
+    #: how many times this request has been (re-)admitted after a
+    #: failure — compared against ``RetryPolicy.attempts`` before a
+    #: poisoned request is requeued instead of counted ``failed``
+    attempts: int = 0
 
 
 @dataclass
@@ -118,6 +137,14 @@ class ServeStats:
     #: separately from normal completions so an SLO gate cannot be
     #: satisfied by silently cutting sequences short.
     truncated: int = 0
+    #: requests that raised mid-serve (poisoned) and exhausted their
+    #: retry budget — the slot was freed, the neighbours kept decoding
+    #: (containment), and no latency sample was recorded for them
+    failed: int = 0
+    #: requests evicted past their tenant's ``slo_steps`` deadline —
+    #: the slot frees for queued work instead of a stale request
+    #: holding it (counted apart from ``failed``: nothing raised)
+    expired: int = 0
     latencies: list = field(default_factory=list)
     queue_waits: list = field(default_factory=list)
     #: one entry per decoded token: the slot-step cost of the step that
@@ -149,6 +176,8 @@ class ServeStats:
         return dict(steps=self.steps, utilization=round(self.utilization, 4),
                     n_done=len(self.latencies),
                     truncated=self.truncated,
+                    failed=self.failed,
+                    expired=self.expired,
                     p50_latency=self.p50_latency,
                     p99_latency=self.p99_latency,
                     mean_queue_wait=(float(np.mean(self.queue_waits))
@@ -180,7 +209,9 @@ class ContinuousBatcher:
                  policy: Union[str, SchedPolicy] = "dlbc",
                  tenants: Optional[Dict[str, float]] = None,
                  prefill_chunk: int = 32,
-                 prefill_mode: str = "chunked"):
+                 prefill_mode: str = "chunked",
+                 retry: Optional[RetryPolicy] = None,
+                 slos: Optional[Dict[str, int]] = None):
         assert isinstance(policy, SchedPolicy) \
             or policy in ("dlbc", "lc", "wdlbc")
         assert prefill_mode in ("chunked", "whole"), prefill_mode
@@ -208,6 +239,15 @@ class ContinuousBatcher:
         #: step (the unchunked baseline arm the adversary bench compares
         #: against)
         self.prefill_mode = prefill_mode
+        #: per-request containment budget: a poisoned request (one that
+        #: raises mid-serve) is requeued until it has been admitted
+        #: ``retry.attempts`` times, then counted ``failed`` — its slot
+        #: frees either way, so one tenant's poison never stalls another
+        #: tenant's decode
+        self.retry = retry if retry is not None else RetryPolicy(attempts=3)
+        #: tenant → SLO deadline in decode steps (0/absent = none);
+        #: merged with any ``TenantQueue.slo_steps`` set on the registry
+        self.slos: Dict[str, int] = dict(slos or {})
         self.sched = SlotExecutor(n_slots, policy=policy)
         self.policy = self.sched.policy.name
         # tenant mode: explicit weights, or any weighted-refill policy
@@ -222,6 +262,14 @@ class ContinuousBatcher:
                 # refill wraps the base policy in the deficit round-robin;
                 # label the run accordingly ("wdlbc", "wlc", ...)
                 self.policy = f"w{self.policy}"
+        if self.registry is not None:
+            # mirror explicit SLOs onto the tenant queues so the two
+            # spellings (slos= kwarg, TenantQueue.slo_steps) agree
+            for name, slo in self.slos.items():
+                try:
+                    self.registry.get(name).slo_steps = int(slo)
+                except KeyError:
+                    pass
         self.cache = MDL.init_cache(cfg, n_slots, cache_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
@@ -338,6 +386,86 @@ class ContinuousBatcher:
         if prefix:
             self._prefilling[slot] = _PrefillState(prefix, latch)
 
+    # -- per-request containment (faults, retries, SLO deadlines) ------------
+
+    def _slo_of(self, tenant: str) -> int:
+        """Deadline in decode steps for ``tenant`` (0 = none): the
+        explicit ``slos=`` map wins, else the tenant queue's
+        ``slo_steps``."""
+        if tenant in self.slos:
+            return int(self.slos[tenant])
+        if self.registry is not None:
+            try:
+                return int(self.registry.get(tenant).slo_steps)
+            except KeyError:
+                return 0
+        return 0
+
+    def _join_timeout_s(self, tenant: str) -> Optional[float]:
+        """Wall bound for the request's ONE scope join, derived from the
+        tenant SLO (1 ms of wall time per SLO step — generous, since the
+        prefill latch discharges in-step; ``None`` = no SLO, block)."""
+        slo = self._slo_of(tenant)
+        return None if slo <= 0 else max(1e-3, 1e-3 * slo)
+
+    def _release_slot(self, i: int):
+        """Free slot ``i`` without recording a completion latency: drop
+        any prefill progress, count the join via ``sched.complete`` (so
+        spawns == joins survives failure paths), and clear the slot."""
+        self._prefilling.pop(i, None)
+        self.sched.complete(slot=i)
+        self.slot_req[i] = None
+        self.slot_pos[i] = 0
+
+    def _fail_request(self, i: int, now: int):
+        """Contain a poisoned request in slot ``i``: record the error,
+        free the slot (neighbours keep decoding), then either requeue it
+        (within the retry budget) or count it ``failed``.  Never raises —
+        one tenant's poison must not take the serving loop down."""
+        r = self.slot_req[i]
+        self.sched.telemetry.record_error("serve.request",
+                                          tb=traceback.format_exc())
+        obs.instant("sched", "error", args={"site": "serve.request"})
+        scope = self.slot_scope[i]
+        if scope is not None:
+            # typed, non-raising join: the slot must free regardless of
+            # what the scope collected
+            scope.wait(timeout=self._join_timeout_s(r.tenant))
+            self.slot_scope[i] = None
+        self._release_slot(i)
+        ts = self.tenant_stats.get(r.tenant)
+        if r.attempts + 1 < self.retry.attempts:
+            r.attempts += 1
+            self.sched.telemetry.record_retry("serve.request")
+            obs.instant("sched", "retry", args={"site": "serve.request"})
+            r.arrive_step = now
+            r.start_step = None
+            r.done_step = None
+            r.tokens = []
+            if self.registry is not None:
+                self.registry.submit(r, r.tenant)
+            else:
+                self.queue.append(r)
+        else:
+            self.stats.failed += 1
+            if ts is not None:
+                ts.failed += 1
+
+    def _expire_request(self, i: int, now: int):
+        """Evict the request in slot ``i`` past its tenant SLO deadline:
+        the slot frees for queued work; the eviction is counted
+        ``expired`` (apart from ``failed`` — nothing raised)."""
+        r = self.slot_req[i]
+        scope = self.slot_scope[i]
+        if scope is not None:
+            scope.wait(timeout=self._join_timeout_s(r.tenant))
+            self.slot_scope[i] = None
+        self._release_slot(i)
+        self.stats.expired += 1
+        ts = self.tenant_stats.get(r.tenant)
+        if ts is not None:
+            ts.expired += 1
+
     # -- chunked prefill ------------------------------------------------------
 
     def _prefill_phase(self) -> int:
@@ -412,6 +540,19 @@ class ContinuousBatcher:
         # (set at refill, cleared at complete)
         for name, n_busy in self.sched.tenant_busy_slots().items():
             self.tenant_stats[name].busy_slot_steps += n_busy
+        # SLO expiry: a request still in-slot ``slo_steps`` after arrival
+        # is evicted NOW so its slot refills next step — a stale request
+        # cannot hold a slot past its tenant's deadline
+        expired_any = False
+        for i in active:
+            r = self.slot_req[i]
+            slo = self._slo_of(r.tenant)
+            if slo > 0 and now - r.arrive_step >= slo:
+                self._expire_request(i, now)
+                expired_any = True
+        if expired_any:
+            active = [i for i, r in enumerate(self.slot_req)
+                      if r is not None]
         if not active:
             self.vtime += 1
             return
@@ -442,8 +583,18 @@ class ContinuousBatcher:
                 nxt = np.asarray(
                     jnp.argmax(logits[:, :self.cfg.vocab], axis=-1))
         with obs.trace_span("serve", "complete"):
+            plan = faults.active()
             for i in decoding:
                 r = self.slot_req[i]
+                if plan is not None:
+                    # poison hook: an injected fault on this request is
+                    # CONTAINED — error recorded, slot freed, request
+                    # requeued or failed; the loop moves to the next slot
+                    try:
+                        plan.poke("serve.request")
+                    except Exception:
+                        self._fail_request(i, now)
+                        continue
                 r.tokens.append(int(nxt[i]))
                 self.slot_pos[i] += 1
                 # per-token decode latency in token units: 1 for the
@@ -456,28 +607,46 @@ class ContinuousBatcher:
                 done = produced >= r.max_new
                 trunc = (not done) and self.slot_pos[i] >= self.cache_len - 1
                 if done or trunc:
-                    if trunc:
-                        # cache-bound kill: count it apart from normal
-                        # completions so p99 gates can't be satisfied by
-                        # silently cutting sequences short
-                        self.stats.truncated += 1
-                        if ts is not None:
-                            ts.truncated += 1
-                    r.done_step = now
-                    # latencies live in ServeStats (the serving-facing
-                    # record); telemetry only counts the join so Fig. 10
-                    # comparisons hold
-                    lat = now - r.arrive_step
-                    self.stats.latencies.append(lat)
-                    if ts is not None:
-                        ts.latencies.append(lat)
-                    scope = self.slot_scope[i]
+                    scope, self.slot_scope[i] = self.slot_scope[i], None
+                    ok = True
                     if scope is not None:
                         # AFE: the request's ONE join point — waits the
                         # latch spanning every prefill chunk (already
-                        # discharged in-step), never one join per chunk
-                        scope.join()
-                        self.slot_scope[i] = None
+                        # discharged in-step), never one join per chunk.
+                        # The typed wait (deadline from the tenant SLO)
+                        # distinguishes "timed out" from "done with
+                        # failures"; either way the slot frees and the
+                        # request is contained as failed rather than
+                        # crashing the serving loop.
+                        out = scope.wait(
+                            timeout=self._join_timeout_s(r.tenant))
+                        if out.status != "done":
+                            ok = False
+                            tb = out.errors[0].tb if out.errors else None
+                            self.sched.telemetry.record_error(
+                                "serve.request", tb=tb)
+                            obs.instant("sched", "error",
+                                        args={"site": "serve.request"})
+                            self.stats.failed += 1
+                            if ts is not None:
+                                ts.failed += 1
+                    if ok:
+                        if trunc:
+                            # cache-bound kill: count it apart from
+                            # normal completions so p99 gates can't be
+                            # satisfied by silently cutting sequences
+                            # short
+                            self.stats.truncated += 1
+                            if ts is not None:
+                                ts.truncated += 1
+                        r.done_step = now
+                        # latencies live in ServeStats (the serving-
+                        # facing record); telemetry only counts the join
+                        # so Fig. 10 comparisons hold
+                        lat = now - r.arrive_step
+                        self.stats.latencies.append(lat)
+                        if ts is not None:
+                            ts.latencies.append(lat)
                     self.sched.complete(slot=i)
                     self.slot_req[i] = None
                     self.slot_pos[i] = 0

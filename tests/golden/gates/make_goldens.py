@@ -129,6 +129,54 @@ def tenants(global_spawns, iso_ratios):
     return envelope("tenants", recs, bench.payload())
 
 
+# -- faults -----------------------------------------------------------------
+
+def faults(lost):
+    """Chaos-lane golden: ``lost`` collected-exception deficits on the
+    run_to_completion arm (0 = conserved, the pass variant — a nonzero
+    deficit is an injected fault the join swallowed)."""
+    walls = {
+        "clean": [9.5e-3, 9.7e-3, 9.6e-3, 9.8e-3, 9.5e-3],
+        "faulted_rtc": [10.1e-3, 10.4e-3, 10.2e-3, 10.5e-3, 10.3e-3],
+        "faulted_ff": [3.5e-3, 3.6e-3, 3.4e-3, 3.7e-3, 3.5e-3],
+        "worker_death": [12.4e-3, 12.6e-3, 12.5e-3, 12.7e-3, 12.4e-3],
+    }
+    counters = {
+        "clean": dict(injected=0, collected=0, errors=0,
+                      worker_deaths=0, deaths_injected=0, cancelled=0),
+        "faulted_rtc": dict(injected=20, collected=20 - lost, errors=20,
+                            worker_deaths=0, deaths_injected=0, cancelled=0),
+        "faulted_ff": dict(injected=6, collected=6, errors=6,
+                           worker_deaths=0, deaths_injected=0, cancelled=9),
+        "worker_death": dict(injected=0, collected=0, errors=0,
+                             worker_deaths=5, deaths_injected=5, cancelled=0),
+    }
+    bench = Bench("faults", seed=0)
+    records = []
+    for arm, ws in walls.items():
+        c = counters[arm]
+        bench.add_samples(arm, ws, oracle=arm == "clean")
+        records.append(dict(
+            arm=arm, attempt=1, reps=5, wall_s=min(ws), wall_samples_s=ws,
+            executed=2000 - c["injected"], spawns=80,
+            completions=80 - c["cancelled"], cancelled_items=0, joins=5,
+            exceptions_lost=lost if arm == "faulted_rtc" else 0,
+            items_unaccounted=0, tasks_unaccounted=0,
+            deaths_unaccounted=0, **c))
+    bench.gate_ratio("p99_under_faults", "faulted_rtc", "clean", "<=",
+                     1.5, p=99)
+    bench.gate_exact("faults_injected", 26, ">=", 2)
+    bench.gate_exact("deaths_injected", 5, ">=", 1)
+    bench.gate_exact("exceptions_conserved", lost, "<=", 0)
+    bench.gate_exact("items_conserved", 0, "<=", 0)
+    bench.gate_exact("tasks_conserved", 0, "<=", 0)
+    bench.gate_exact("deaths_conserved", 0, "<=", 0)
+    bench.gate_exact("rtc_no_cancellation", 0, "<=", 0)
+    bench.gate_exact("clean_arm_clean", 0, "<=", 0)
+    records.append(dict(arm="gates", attempt=1))
+    return envelope("faults", records, bench.payload())
+
+
 # -- dist -------------------------------------------------------------------
 
 def dist(samples, lie=False):
@@ -177,6 +225,8 @@ def main():
          tenants(global_spawns=98, iso_ratios=[0.4] * 5))
     dump("tenants_fail.json",
          tenants(global_spawns=99, iso_ratios=[0.4] * 5))
+    dump("faults_pass.json", faults(lost=0))
+    dump("faults_fail.json", faults(lost=3))
     dump("dist_pass.json", dist([1.0, 1.1, 1.05, 0.95, 1.02]))
     dump("dist_fail.json", dist([5.0, 5.1, 5.05, 4.95, 5.02], lie=True))
     (HERE / "trace_pass" / "trace").mkdir(parents=True, exist_ok=True)

@@ -188,6 +188,21 @@ SCRIPT = textwrap.dedent("""
         xh = jax.random.normal(jax.random.PRNGKey(3), (128, cfg.d_model))
         _, sth = MOE.moe_apply(p_hot, cfg_hot, xh, return_stats=True)
     results["hot"] = {k: float(v) for k, v in sth.items()}
+
+    # shard-loss degradation: losing shard 1 closes its lanes, the
+    # round retries once with the traffic rerouted to live shards
+    from repro.sched.faults import FaultPlan, FaultSpec, injected_faults
+    plan = FaultPlan([FaultSpec(site="ep.round", kind="shard_loss",
+                                every=1, shard=1, max_injections=1)],
+                     seed=0)
+    tel_d = SchedTelemetry()
+    with mesh_context(mesh4):
+        with injected_faults(plan):
+            _, st_d = ep_round(p, cfg, x, mesh=mesh4, telemetry=tel_d)
+    results["degraded"] = {
+        "stats": {k: float(v) for k, v in st_d.items()},
+        "retries": tel_d.retries, "joins": tel_d.joins,
+        "exchange": tel_d.exchange.summary()}
     print("RESULT " + json.dumps(results))
 """)
 
@@ -239,3 +254,18 @@ def test_ep_hot_router_reassigns_under_pressure(ep_results):
     assert hot["sent"] == hot["received"]
     # spawns + dropped == T*K pairs (the shared vocabulary invariant)
     assert hot["spawns"] + hot["dropped"] == 128 * 2
+
+
+def test_ep_shard_loss_degrades_not_aborts(ep_results):
+    """A lost shard degrades the round (lanes rerouted pre-collective),
+    it does not abort it: one retry, one join, posted == completed, the
+    degraded flag set — and with ample capacity nothing drops."""
+    d = ep_results["degraded"]
+    st, ex = d["stats"], d["exchange"]
+    assert st["degraded"] == 1 and st["dead_shards"] == 1
+    assert st["reassigned"] > 0           # the dead shard's traffic moved
+    assert st["dropped"] == 0             # ample capacity absorbed it
+    assert d["retries"] == 1
+    assert d["joins"] == 1                # still ONE join for the round
+    assert ex["degraded_rounds"] == 1
+    assert ex["posted"] == ex["completed"] == 1

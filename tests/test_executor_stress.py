@@ -34,7 +34,10 @@ import time
 
 import pytest
 
-from repro.sched import DCAFE, DLBC, ThreadExecutor, WorkStealingExecutor
+from repro.sched import (
+    DCAFE, DLBC, MultipleExceptions, ThreadExecutor, WorkStealingExecutor,
+)
+from repro.sched.faults import FaultPlan, FaultSpec, injected_faults
 
 EXECUTORS = [ThreadExecutor, WorkStealingExecutor]
 N_PRODUCERS = 4
@@ -140,8 +143,10 @@ def test_injected_exceptions_lose_no_tasks_and_kill_no_workers(cls):
 def test_run_loop_spawned_chunk_survives_raising_item(cls):
     """An item raising inside a spawned chunk must not drop the chunk's
     remaining items: every spawned item is attempted, raises are counted
-    in telemetry.errors.  (LC spawns every chunk, so no caller-side
-    items propagate here.)"""
+    in telemetry.errors, and the per-loop join rethrows them all as ONE
+    MultipleExceptions (the X10 finish contract — AFE may move the join,
+    never lose the exception).  (LC spawns every chunk, so no
+    caller-side items propagate here.)"""
     ex = cls(n_workers=2)
     try:
         lock = threading.Lock()
@@ -153,9 +158,13 @@ def test_run_loop_spawned_chunk_survives_raising_item(cls):
             if i % 3 == 0:
                 raise ValueError(f"injected {i}")
 
-        ex.run_loop(list(range(30)), fn, policy="lc")
+        with pytest.raises(MultipleExceptions) as ei:
+            ex.run_loop(list(range(30)), fn, policy="lc")
         assert sorted(attempted) == list(range(30))  # nothing dropped
-        assert ex.telemetry.errors == len(range(0, 30, 3))
+        n_raised = len(range(0, 30, 3))
+        assert ei.value.count == n_raised           # none lost, none extra
+        assert all(isinstance(e.exc, ValueError) for e in ei.value.errors)
+        assert ex.telemetry.errors == n_raised
         assert ex.telemetry.parallel_items == 30
     finally:
         ex.shutdown()
@@ -206,13 +215,18 @@ def test_work_stealing_skewed_ranges_conserve_work():
             # DCAFE = DLBC chunking + escaped joins; per-producer grain
             # controller adapts across the three loops
             policy = DCAFE()
-            with ex.finish() as scope:
-                for _ in range(3):
-                    # injected failures ride along as scoped single tasks
-                    # (caller-chunk raises would abort the loop like a
-                    # plain for loop — that contract has its own test)
-                    scope.add([ex.submit(boom), ex.submit(boom)])
-                    ex.run_loop(items, fn, policy=policy, scope=scope)
+            # the scope's ONE join rethrows the booms as an aggregate —
+            # exactly 6 per producer (2 per loop × 3 loops), none lost
+            with pytest.raises(MultipleExceptions) as ei:
+                with ex.finish() as scope:
+                    for _ in range(3):
+                        # injected failures ride along as scoped single
+                        # tasks (caller-chunk raises would abort the loop
+                        # like a plain for loop — that contract has its
+                        # own test)
+                        scope.add([ex.submit(boom), ex.submit(boom)])
+                        ex.run_loop(items, fn, policy=policy, scope=scope)
+            assert ei.value.count == 3 * 2
 
         _run_producers(produce)
         want = sorted((p, i) for p in range(N_PRODUCERS)
@@ -292,17 +306,68 @@ def test_work_stealing_producers_of_single_tasks_rebalance():
 
 @pytest.mark.parametrize("cls", EXECUTORS)
 def test_finish_scope_joins_once_despite_raises(cls):
-    """A scope over raising tasks joins exactly once and never hangs."""
+    """A scope over raising tasks joins exactly once (the join is
+    counted BEFORE the rethrow), never hangs, and surfaces every error
+    in one MultipleExceptions."""
     ex = cls(n_workers=2)
     try:
         def boom():
             raise RuntimeError("injected")
 
-        with ex.finish() as scope:
-            scope.add([ex.submit(boom) for _ in range(8)])
+        with pytest.raises(MultipleExceptions) as ei:
+            with ex.finish() as scope:
+                scope.add([ex.submit(boom) for _ in range(8)])
+        assert ei.value.count == 8
         t = ex.telemetry
         assert t.joins == 1
         assert t.errors == 8
         assert t.completions == t.spawns == 8
     finally:
         ex.shutdown()
+
+
+def test_fault_seed_sweep_conserves_exceptions():
+    """Hypothesis sweep over FaultPlan seeds × injection cadence ×
+    executor × fail mode: however the grain controller, thieves, and
+    helpers interleave the chunks, exception-count conservation holds
+    EXACTLY — every injected fault is recorded in ``telemetry.errors``
+    and collected into the scope's MultipleExceptions (none lost, none
+    double-counted), and task accounting closes as
+    ``spawns == completions + cancelled``."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16 - 1), every=st.integers(3, 13),
+           cls_i=st.integers(0, 1), fail_fast=st.booleans())
+    def run(seed, every, cls_i, fail_fast):
+        ex = EXECUTORS[cls_i](n_workers=3)
+        try:
+            plan = FaultPlan([FaultSpec(site="sched.item", kind="raise",
+                                        every=every)], seed=seed)
+            mode = "fail_fast" if fail_fast else "run_to_completion"
+            collected = 0
+            with injected_faults(plan):
+                try:
+                    with ex.finish(fail_mode=mode) as scope:
+                        ex.run_loop(list(range(64)), lambda i: None,
+                                    policy="dcafe", scope=scope)
+                except MultipleExceptions as e:
+                    collected = e.count
+            t = ex.telemetry
+            injected = plan.injected_total()
+            # exact conservation, independent of interleaving: only
+            # spawned items poke the hook, so every injection is both
+            # recorded and collected
+            assert collected == injected == t.errors, (
+                collected, injected, t.errors)
+            assert t.spawns == t.completions + t.cancelled, (
+                t.spawns, t.completions, t.cancelled)
+            if not fail_fast:
+                assert t.cancelled == 0 and t.cancelled_items == 0
+            assert ex.idle_workers() == ex.n_workers
+        finally:
+            ex.shutdown()
+
+    run()

@@ -1,0 +1,445 @@
+"""Exception semantics + fault injection (repro.sched.faults) across
+every adopter surface.
+
+The paper's exception extension, made testable: AFE may move WHERE a
+join happens but never WHETHER an exception surfaces.  These tests pin
+
+* **FaultPlan determinism** — ``every=N`` makes the injection COUNT a
+  pure function of the poke count (no thread-interleaving dependence);
+  rate-based plans are seed-deterministic;
+* **RetryPolicy** — deterministic backoff+jitter, telemetry bumps per
+  retry, unwrapped propagation after the budget;
+* **executor fault semantics** — MultipleExceptions carries per-task
+  cause/range/site, fail_fast cancels siblings with exact
+  ``spawns == completions + cancelled`` accounting, worker death loses
+  no work, and ``FinishScope.wait(timeout=)`` returns a typed
+  JoinOutcome distinguishing "timed out" from "done with failures";
+* **adopters** — checkpoint shard writes retry without aborting the
+  save (and a permanent failure can never COMMIT); the batcher contains
+  a poisoned request per-slot while its neighbour decodes bitwise
+  identically to a fault-free run; tenant SLO deadlines expire stale
+  requests without breaking spawns == joins.
+
+(EP shard-loss degradation needs a multi-device mesh and lives in the
+``tests/test_ep.py`` subprocess suite.)
+"""
+
+import pathlib
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.models import model as MDL
+from repro.sched import (
+    MultipleExceptions, ThreadExecutor, WorkStealingExecutor,
+)
+from repro.sched.executors import JoinOutcome
+from repro.sched.faults import (
+    FaultPlan, FaultSpec, InjectedFault, RetryPolicy, injected_faults,
+)
+from repro.serve.batcher import ContinuousBatcher, Request
+
+EXECUTORS = [ThreadExecutor, WorkStealingExecutor]
+
+
+# -- FaultPlan determinism ---------------------------------------------------
+
+def test_fault_plan_every_n_count_is_poke_deterministic():
+    """``every=N`` fires on exactly every Nth poke of the site: the
+    injection count over M pokes is M // N regardless of which threads
+    poked — the property the exact conservation gates rest on."""
+    plan = FaultPlan([FaultSpec(site="sched.item", kind="raise", every=7)],
+                     seed=0)
+    raised = 0
+    for _ in range(100):
+        try:
+            plan.poke("sched.item")
+        except InjectedFault:
+            raised += 1
+    assert raised == 100 // 7
+    assert plan.injected_total() == raised
+    assert plan.injected_total(site="sched.item") == raised
+    assert plan.injected_total(site="other") == 0
+
+
+def test_fault_plan_every_n_count_deterministic_across_threads():
+    plan = FaultPlan([FaultSpec(site="sched.item", kind="raise", every=5)],
+                     seed=3)
+    raised = []
+    lock = threading.Lock()
+
+    def poke_some(k):
+        for _ in range(k):
+            try:
+                plan.poke("sched.item")
+            except InjectedFault:
+                with lock:
+                    raised.append(1)
+
+    threads = [threading.Thread(target=poke_some, args=(25,))
+               for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(raised) == 100 // 5 == plan.injected_total()
+
+
+def test_fault_plan_rate_is_seed_deterministic():
+    def run(seed):
+        plan = FaultPlan([FaultSpec(site="s", kind="raise", rate=0.3)],
+                         seed=seed)
+        fired = []
+        for i in range(50):
+            try:
+                plan.poke("s")
+                fired.append(0)
+            except InjectedFault:
+                fired.append(1)
+        return fired
+
+    assert run(7) == run(7)          # same seed, same sequence
+    assert run(7) != run(8)          # different seed, different draws
+
+
+def test_fault_plan_max_injections_caps():
+    plan = FaultPlan([FaultSpec(site="s", kind="raise", every=2,
+                                max_injections=3)], seed=0)
+    raised = 0
+    for _ in range(40):
+        try:
+            plan.poke("s")
+        except InjectedFault:
+            raised += 1
+    assert raised == 3 == plan.injected_total()
+
+
+def test_fault_plan_validates_specs():
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", kind="nope", every=1)
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", kind="raise")  # neither every nor rate
+
+
+# -- RetryPolicy -------------------------------------------------------------
+
+def test_retry_policy_delay_deterministic_and_bounded():
+    p = RetryPolicy(attempts=5, base_delay_s=0.01, max_delay_s=0.05,
+                    seed=42)
+    q = RetryPolicy(attempts=5, base_delay_s=0.01, max_delay_s=0.05,
+                    seed=42)
+    for attempt in range(1, 5):
+        for key in (0, 1, 7):
+            d1, d2 = p.delay_s(attempt, key), q.delay_s(attempt, key)
+            assert d1 == d2                      # seeded, reproducible
+            # capped base, with up to +jitter on top
+            assert 0.0 <= d1 <= 0.05 * (1 + p.jitter)
+    # different keys de-correlate (thundering-herd protection)
+    assert p.delay_s(3, 0) != p.delay_s(3, 1)
+    # zero base = never sleep (the test/bench default)
+    assert RetryPolicy(attempts=3).delay_s(2, 5) == 0.0
+
+
+def test_retry_policy_runs_and_counts_retries():
+    from repro.sched import SchedTelemetry
+    tel = SchedTelemetry()
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    p = RetryPolicy(attempts=3)  # base_delay_s=0 → no sleeping in tests
+    assert p.run(flaky, key=0, site="t", telemetry=tel) == "ok"
+    assert len(calls) == 3
+    assert tel.retries == 2
+
+
+def test_retry_policy_exhaustion_propagates_unwrapped():
+    p = RetryPolicy(attempts=2)
+
+    def always():
+        raise OSError("permanent")
+
+    with pytest.raises(OSError, match="permanent"):
+        p.run(always)
+
+
+# -- executor fault semantics ------------------------------------------------
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_multiple_exceptions_carry_cause_range_and_site(cls):
+    ex = cls(n_workers=2)
+    try:
+        def fn(i):
+            if i % 4 == 0:
+                raise KeyError(i)
+
+        with pytest.raises(MultipleExceptions) as ei:
+            ex.run_loop(list(range(20)), fn, policy="lc")
+        me = ei.value
+        assert me.count == 5
+        assert me.__cause__ is me.errors[0].exc
+        for err in me.errors:
+            assert isinstance(err.exc, KeyError)
+            assert err.site == "sched.item"
+            assert 0 <= err.lo < err.hi <= 20    # the raising item's range
+            assert "KeyError" in err.summary()
+            assert "KeyError" in err.tb          # traceback preserved
+    finally:
+        ex.shutdown()
+
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_fail_fast_cancels_siblings_with_exact_accounting(cls):
+    """fail_fast: the first raising chunk cancels its siblings via the
+    scope's CancelToken; cancelled tasks/items are ACCOUNTED, so the
+    conservation gate ``spawns == completions + cancelled`` still
+    closes."""
+    ex = cls(n_workers=3)
+    try:
+        n = 400
+
+        def fn(i):
+            if i == 0:
+                raise ValueError("poison")
+            time.sleep(0.0002)
+
+        with pytest.raises(MultipleExceptions):
+            with ex.finish(fail_mode="fail_fast") as scope:
+                ex.run_loop(list(range(n)), fn, policy="dcafe",
+                            scope=scope)
+        t = ex.telemetry
+        assert t.errors >= 1
+        assert t.spawns == t.completions + t.cancelled, (
+            t.spawns, t.completions, t.cancelled)
+        assert ex.idle_workers() == ex.n_workers
+    finally:
+        ex.shutdown()
+
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_injected_faults_conserved_exactly(cls):
+    """The chaos gate in miniature: injected == recorded == collected,
+    exactly, under the default run_to_completion mode."""
+    ex = cls(n_workers=3)
+    try:
+        plan = FaultPlan([FaultSpec(site="sched.item", kind="raise",
+                                    every=9)], seed=5)
+        collected = 0
+        with injected_faults(plan):
+            try:
+                with ex.finish() as scope:
+                    ex.run_loop(list(range(100)), lambda i: None,
+                                policy="dcafe", scope=scope)
+            except MultipleExceptions as e:
+                collected = e.count
+        assert collected == plan.injected_total() == ex.telemetry.errors
+        assert collected > 0
+    finally:
+        ex.shutdown()
+
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_worker_death_loses_no_work(cls):
+    """A worker dying mid-run (fault hook) re-queues/re-places its
+    claimed work: every item still executes, deaths are counted, and
+    the loop completes with the surviving workers."""
+    ex = cls(n_workers=3)
+    try:
+        plan = FaultPlan([FaultSpec(site="sched.worker",
+                                    kind="worker_death", every=2,
+                                    max_injections=2)], seed=0)
+        lock = threading.Lock()
+        seen = []
+
+        def fn(i):
+            with lock:
+                seen.append(i)
+            time.sleep(0.0005)
+
+        with injected_faults(plan):
+            with ex.finish() as scope:
+                ex.run_loop(list(range(60)), fn, policy="dcafe",
+                            scope=scope)
+        assert sorted(seen) == list(range(60))   # nothing lost
+        assert ex.telemetry.worker_deaths == 2
+        assert ex.idle_workers() == ex.n_workers - 2
+    finally:
+        ex.shutdown()
+
+
+@pytest.mark.parametrize("cls", EXECUTORS)
+def test_finish_scope_wait_timeout_is_typed(cls):
+    """``wait(timeout=)`` distinguishes "timed out" (pending work, no
+    join counted, scope reusable) from "done"."""
+    ex = cls(n_workers=1)
+    try:
+        release = threading.Event()
+
+        def slow():
+            release.wait(timeout=10)
+
+        with pytest.raises(MultipleExceptions):
+            # exercise "done with failures" on the same scope type
+            with ex.finish() as probe:
+                probe.add([ex.submit(lambda: (_ for _ in ()).throw(
+                    RuntimeError("x")))])
+
+        scope = ex.finish()
+        scope.add([ex.submit(slow)])
+        out = scope.wait(timeout=0.05)
+        assert isinstance(out, JoinOutcome)
+        assert out.status == "timeout" and out.pending == 1
+        assert ex.telemetry.joins == 1           # only the probe's join
+        release.set()
+        out2 = scope.wait(timeout=10)
+        assert out2.status == "done" and not out2.errors
+        out2.raise_if_failed()                   # no-op on success
+        assert ex.telemetry.joins == 2
+    finally:
+        release.set()
+        ex.shutdown()
+
+
+def test_join_outcome_raise_if_failed():
+    from repro.sched.executors import TaskError
+    err = TaskError(exc=ValueError("boom"), lo=3, hi=4)
+    out = JoinOutcome(status="failed", errors=(err,), error_count=1)
+    assert out.failed
+    with pytest.raises(MultipleExceptions) as ei:
+        out.raise_if_failed()
+    assert ei.value.count == 1
+
+
+# -- checkpoint adopter ------------------------------------------------------
+
+@pytest.fixture
+def tree():
+    return {"a": np.arange(12.0), "b": {"c": np.ones((3, 3)),
+                                        "d": np.zeros(5)}}
+
+
+def test_ckpt_transient_shard_faults_retried_away(tmp_path, tree):
+    plan = FaultPlan([FaultSpec(site="ckpt.shard", kind="raise", every=2,
+                                max_injections=2)], seed=1)
+    with injected_faults(plan):
+        with CheckpointManager(str(tmp_path), sched_policy="dcafe") as mgr:
+            mgr.save(0, tree, blocking=True)
+    assert mgr.latest_step() == 0                # published despite faults
+    # every injection caused exactly one retry (attempts=3 covers the
+    # worst case of both injections landing on one shard)
+    assert mgr.telemetry.retries == plan.injected_total() >= 1
+    step, got = mgr.restore(0)
+    assert step == 0
+    np.testing.assert_array_equal(got["a"], tree["a"])
+
+
+@pytest.mark.parametrize("policy", ["dcafe", "lc"])
+def test_ckpt_permanent_shard_failure_never_commits(tmp_path, tree,
+                                                    policy):
+    """Exhausted retries fail the PUBLISH (escaped-join and per-loop
+    paths alike): no COMMIT appears and the temp dir is left for
+    forensics."""
+    plan = FaultPlan([FaultSpec(site="ckpt.shard", kind="raise",
+                                every=1)], seed=1)
+    with injected_faults(plan):
+        mgr = CheckpointManager(str(tmp_path), sched_policy=policy,
+                                retry=RetryPolicy(attempts=2))
+        with pytest.raises(RuntimeError, match="shard write"):
+            mgr.save(0, tree, blocking=True)
+        mgr.close()
+    assert mgr.latest_step() is None             # nothing COMMITted
+    assert list(pathlib.Path(tmp_path).glob("tmp_*"))  # forensics dir
+
+
+# -- serving adopter ---------------------------------------------------------
+
+def _serve_cfg():
+    return ModelConfig(name="faults-serve", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab=64)
+
+
+@pytest.fixture(scope="module")
+def serve_params():
+    return MDL.init_params(_serve_cfg(), jax.random.PRNGKey(0))
+
+
+def _reqs():
+    return [Request(rid=i, prompt=[1 + i % 5, 2, 3], max_new=6,
+                    arrive_step=i // 2) for i in range(8)]
+
+
+def test_batcher_contains_poisoned_requests(serve_params):
+    """A poisoned request frees its slot and is retried then failed —
+    the loop finishes, every request is accounted (done or failed), and
+    spawns == joins survives the failure path."""
+    cfg = _serve_cfg()
+    plan = FaultPlan([FaultSpec(site="serve.request", kind="raise",
+                                every=7)], seed=3)
+    with injected_faults(plan):
+        b = ContinuousBatcher(cfg, serve_params, n_slots=4, cache_len=64,
+                              retry=RetryPolicy(attempts=2))
+        stats = b.run(_reqs())
+    t = b.sched.telemetry
+    assert stats.failed > 0
+    assert stats.failed + len(stats.latencies) == 8
+    assert t.spawns == t.joins                   # conservation intact
+    assert t.errors == plan.injected_total()
+    assert t.errors_by_site.get("serve.request") == t.errors
+
+
+def test_batcher_neighbour_decodes_bitwise_identically(serve_params):
+    """Refill-mid-decode under faults: the requests that survive a
+    poisoned neighbour decode EXACTLY the tokens they decode in a
+    fault-free run — per-slot cache isolation holds through failure,
+    eviction, and refill."""
+    cfg = _serve_cfg()
+    ref = _reqs()
+    clean = ContinuousBatcher(cfg, serve_params, n_slots=2, cache_len=64)
+    clean.run(ref)
+    want = {r.rid: list(r.tokens) for r in ref if r.done_step is not None}
+    assert len(want) == 8
+
+    plan = FaultPlan([FaultSpec(site="serve.request", kind="raise",
+                                every=5)], seed=9)
+    faulted = _reqs()
+    with injected_faults(plan):
+        b = ContinuousBatcher(cfg, serve_params, n_slots=2, cache_len=64,
+                              retry=RetryPolicy(attempts=1))
+        b.run(faulted)
+    done = [r for r in faulted if r.done_step is not None]
+    assert done, "no request survived — fault rate too high for the test"
+    assert b.stats.failed > 0, "no request failed — poke cadence drifted"
+    for r in done:
+        assert list(r.tokens) == want[r.rid], (
+            f"request {r.rid} decoded differently next to a poisoned "
+            f"neighbour")
+
+
+def test_batcher_slo_deadline_expires_stale_requests(serve_params):
+    cfg = _serve_cfg()
+    b = ContinuousBatcher(cfg, serve_params, n_slots=2, cache_len=64,
+                          slos={"default": 3})
+    stats = b.run([Request(rid=i, prompt=[1, 2], max_new=20)
+                   for i in range(4)])
+    t = b.sched.telemetry
+    assert stats.expired == 4                    # all far past a 3-step SLO
+    assert t.spawns == t.joins
+    assert b.registry is None                    # single-queue spelling
+
+
+def test_batcher_tenant_slo_spellings_agree(serve_params):
+    cfg = _serve_cfg()
+    b = ContinuousBatcher(cfg, serve_params, n_slots=2, cache_len=64,
+                          tenants={"a": 1.0, "b": 1.0}, slos={"a": 3})
+    assert b.registry.get("a").slo_steps == 3
+    assert b._slo_of("a") == 3 and b._slo_of("b") == 0

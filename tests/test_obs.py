@@ -9,7 +9,8 @@ import pytest
 from repro.obs import export as obs_export
 from repro.obs import trace as obs
 from repro.sched import (
-    LogHistogram, SchedTelemetry, ThreadExecutor, WorkStealingExecutor,
+    LogHistogram, MultipleExceptions, SchedTelemetry, ThreadExecutor,
+    WorkStealingExecutor,
 )
 from repro.sched.telemetry import ExchangeCounters
 
@@ -213,16 +214,24 @@ def test_errors_traced_and_contained():
             raise ValueError(x)
 
     try:
-        # task exceptions are contained (counted, never re-raised: an
-        # uncontained raise would hang the join)
-        ex.run_loop(list(range(8)), boom)
+        # spawned-item exceptions are contained (counted, collected) and
+        # the per-loop join rethrows them all as ONE MultipleExceptions;
+        # a caller-chunk raise would propagate raw like a plain for loop
+        with pytest.raises((MultipleExceptions, ValueError)):
+            ex.run_loop(list(range(8)), boom)
     finally:
         ex.shutdown()
     check = obs_export.crosscheck(obs_export.chrome_trace(), tel.summary())
     assert check["ok"], check["mismatches"]
-    assert check["trace"]["errors"] >= 1
-    # containment: a raising task still completes (errors ⊂ completions)
+    # containment: a raising spawned task still completes, so the task
+    # counters close even though the join rethrew
     assert check["trace"]["completions"] == check["trace"]["spawns"]
+    if tel.errors:
+        # item 3 ran in a spawned chunk: the error instant carries its
+        # site, and the per-site breakdown crosschecks (already covered
+        # by check["ok"] — assert the count explicitly for clarity)
+        assert check["trace"]["errors"] == 1
+        assert tel.errors_by_site == {"sched.item": 1}
 
 
 # -- telemetry growth (satellites) ------------------------------------------
