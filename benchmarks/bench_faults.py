@@ -37,10 +37,11 @@ import time
 from contextlib import nullcontext
 
 from repro.obs import trace as obs
+from repro.obs.monitor import FlightRecorder, recording
 from repro.sched import MultipleExceptions, WorkStealingExecutor
 from repro.sched.faults import FaultPlan, FaultSpec, injected_faults
 
-from .common import report, write_trace
+from .common import INCIDENTS_DIR, report, write_trace
 from .harness import Bench
 
 N_ITEMS = 400
@@ -207,14 +208,37 @@ def run(attempts: int = 2, repeats: int = None, seed: int = 0):
         harness=bench.payload())
     # Traced pass on the richest arm (rtc: errors AND full completion) —
     # the artifact CI replays through the exporter, proving every error
-    # instant carries its site and conservation survives tracing.
+    # instant carries its site and conservation survives tracing.  A
+    # flight recorder rides along: the MultipleExceptions join must fire
+    # an incident whose embedded trace window crosschecks, and the same
+    # recorder over a fault-free pass must stay silent.
     obs.clear()
     obs.enable()
     try:
+        # clean pass first: same settings, zero faults -> zero incidents
+        ex = WorkStealingExecutor(n_workers=WORKERS)
+        try:
+            rec = FlightRecorder(telemetry=ex.telemetry)
+            with recording(rec):
+                rec.arm()
+                with ex.finish() as scope:
+                    ex.run_loop(list(range(N_ITEMS)),
+                                lambda i: time.sleep(ITEM_SLEEP_S),
+                                scope=scope)
+            assert rec.count() == 0, (
+                f"flight recorder fired {rec.count()} incident(s) on a "
+                "fault-free run (false positive)")
+        finally:
+            ex.shutdown()
+        obs.clear()
+
         ex = WorkStealingExecutor(n_workers=WORKERS)
         plan = _plan_for("faulted_rtc", seed, rep=999)
         try:
-            with injected_faults(plan):
+            rec = FlightRecorder(telemetry=ex.telemetry,
+                                 out_dir=str(INCIDENTS_DIR))
+            with recording(rec), injected_faults(plan):
+                rec.arm()
                 try:
                     with ex.finish() as scope:
                         ex.run_loop(list(range(N_ITEMS)),
@@ -222,6 +246,15 @@ def run(attempts: int = 2, repeats: int = None, seed: int = 0):
                                     scope=scope)
                 except MultipleExceptions:
                     pass
+            assert rec.count("multiple_exceptions") >= 1, (
+                "MultipleExceptions join fired no incident")
+            bad_cross = [i for i in rec.incidents
+                         if not i.get("crosscheck", {}).get("ok", False)]
+            assert not bad_cross, (
+                "incident trace window failed conservation crosscheck: "
+                f"{[i.get('crosscheck') for i in bad_cross]}")
+            print(f"[flight recorder: {rec.count()} incident(s), "
+                  f"crosscheck ok, persisted to {INCIDENTS_DIR}]")
             t = ex.telemetry
             write_trace("faults", dict(
                 spawns=t.spawns, joins=t.joins, completions=t.completions,

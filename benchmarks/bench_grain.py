@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import time
 
+from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs
 from repro.sched import DLBC, GrainController, WorkStealingExecutor
 
@@ -52,6 +53,9 @@ SPAWNS_PER_LOOP_MAX = N_ITEMS // 4  # "~n_ranges, not ~n_items"
 #: tracing overhead budget on the uniform grain loop (wall time there IS
 #: scheduling overhead — the harshest denominator for the tracer)
 TRACE_OVERHEAD_MAX = 0.05
+#: always-on metrics registry budget on the same loop (the registry is
+#: default-ON in production, so its bumps must be cheaper still)
+METRICS_OVERHEAD_MAX = 0.05
 OVERHEAD_ITEMS = 512   # larger loop: µs-scale emit cost needs a stable base
 OVERHEAD_REPS = 9
 
@@ -147,6 +151,38 @@ def _overhead_check() -> dict:
                 trace_overhead_ok=frac <= TRACE_OVERHEAD_MAX)
 
 
+def _metrics_overhead_check() -> dict:
+    """Always-on metrics plane cost on the same uniform loop: best-of
+    wall with the registry disabled vs enabled (tracing off both arms).
+    Bumps are per scheduling edge (per loop, never per item), so the
+    default-ON registry must stay within ``METRICS_OVERHEAD_MAX``."""
+    items = list(range(OVERHEAD_ITEMS))
+    ex = WorkStealingExecutor(n_workers=WORKERS)
+    policy = DLBC()
+
+    def one():
+        t0 = time.perf_counter()
+        ex.run_loop(items, _cpu_item, policy=policy)
+        return time.perf_counter() - t0
+
+    try:
+        one()  # warm the pool/ranges before either arm is timed
+        base = enabled = float("inf")
+        # interleaved off/on pairs: host drift hits both arms equally
+        for _ in range(OVERHEAD_REPS):
+            obs_metrics.disable()
+            base = min(base, one())
+            obs_metrics.enable()
+            enabled = min(enabled, one())
+    finally:
+        obs_metrics.enable()  # the registry is default-ON
+        ex.shutdown()
+    frac = enabled / base - 1.0
+    return dict(metrics_base_wall_s=base, metrics_wall_s=enabled,
+                metrics_overhead_frac=round(frac, 4),
+                metrics_overhead_ok=frac <= METRICS_OVERHEAD_MAX)
+
+
 def _harness(records: list, seed: int) -> Bench:
     """Fold the sweep's per-repeat wall distributions into bootstrap-CI
     gates — the verdicts CI replays from the artifact."""
@@ -210,6 +246,7 @@ def run(attempts: int = 2, repeats: int = None, seed: int = 0):
         bench = _harness(records, seed)
         gates = _gates(records, bench)
         gates.update(_overhead_check())
+        gates.update(_metrics_overhead_check())
         gates["attempt"] = attempt
         if not bench.failed() and all(
                 v for k, v in gates.items()
@@ -220,6 +257,8 @@ def run(attempts: int = 2, repeats: int = None, seed: int = 0):
 
     bench.gate_exact("trace_overhead", gates["trace_overhead_frac"],
                      "<=", TRACE_OVERHEAD_MAX)
+    bench.gate_exact("metrics_overhead", gates["metrics_overhead_frac"],
+                     "<=", METRICS_OVERHEAD_MAX)
     rows = [[r["dist"], r["arm"], f"{r['wall_s'] * 1e3:.2f}",
              f"{r['items_per_s']:.0f}", f"{r['spawns_per_loop']:.1f}",
              r["steals"], r["splits"], r["grain_k"],
@@ -263,6 +302,9 @@ def run(attempts: int = 2, repeats: int = None, seed: int = 0):
     assert gates["trace_overhead_ok"], (
         f"tracing overhead {gates['trace_overhead_frac']:.1%} on the "
         f"uniform grain loop (budget {TRACE_OVERHEAD_MAX:.0%})")
+    assert gates["metrics_overhead_ok"], (
+        f"always-on metrics overhead {gates['metrics_overhead_frac']:.1%} "
+        f"on the uniform grain loop (budget {METRICS_OVERHEAD_MAX:.0%})")
     return out
 
 

@@ -1,0 +1,234 @@
+"""SLO burn-rate lane: adversary bursts burn the error budget, the
+flight recorder fires, and DLBC chunking keeps the budget intact.
+
+Three arms over the same seeded traces, each with the per-tenant
+:class:`~repro.obs.monitor.SloMonitor` attached to the batcher and an
+armed :class:`~repro.obs.monitor.FlightRecorder` (tracing on, so every
+incident embeds its own trace window):
+
+* ``clean``       — the steady tenant alone under its SLO: the
+  zero-incident baseline.  Any incident here is a false positive.
+* ``adv_whole``   — a long-prompt adversary prefills whole-prompt (the
+  pre-DLBC behaviour): every co-scheduled steady decode step absorbs
+  the full prompt cost, blowing the steady tenant's per-step cost
+  ceiling.  Its error budget burns and ONE ``slo_burn`` incident fires.
+* ``adv_chunked`` — the *same* adversary trace, prefill DLBC-chunked at
+  ``ADV_PREFILL_CHUNK``: no step exceeds the ceiling, zero incidents.
+  Chunking is the SLO story told as a budget, not a percentile.
+
+Gates (exact — integer incident/step counts over seeded runs carry no
+sampling noise):
+
+* zero incidents and zero bad steps on ``clean`` and ``adv_chunked``
+  on *every* repeat (no false positives at identical settings);
+* at least one ``slo_burn`` incident per repeat on ``adv_whole``, fired
+  within ``DETECT_WITHIN_K`` steps of the first adversary arrival;
+* every incident's embedded trace window passes ``crosscheck()``
+  against its embedded telemetry delta — an incident report that lies
+  about its own window is itself a failure.
+
+CI replays the verdicts (and the crosschecks, from the persisted
+incident files) via ``python -m benchmarks.gates slo``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MDL
+from repro.obs import trace as obs
+from repro.obs.monitor import FlightRecorder, SloMonitor
+from repro.serve.batcher import ContinuousBatcher, Request
+
+from .common import INCIDENTS_DIR, report
+from .harness import Bench
+
+STEPS = 160                 # arrival horizon (runs drain past it)
+SLOTS = 4
+STEADY_MAX_NEW = 4
+STEADY_EVERY = 4            # steady arrival spacing (steps)
+ADV_PROMPT_LEN = 48
+ADV_MAX_NEW = 2
+ADV_EVERY = 12
+ADV_PREFILL_CHUNK = 8
+CACHE_LEN = 64
+STEADY_SLO_STEPS = 40       # whole-request deadline (decode steps)
+#: explicit per-step cost ceiling for the steady tenant: own prefill
+#: (1 + 3-token prompt) plus one co-scheduled adversary chunk
+#: (ADV_PREFILL_CHUNK) is the worst *chunked* step — whole-prompt
+#: prefill (1 + ADV_PROMPT_LEN) blows it by ~4x
+STEADY_COST_SLO = 1.0 + 3.0 + ADV_PREFILL_CHUNK
+#: error budget: BUDGET_FRAC x HORIZON bad steps tolerated before the
+#: budget counts as burned — tight enough that the adversary's ~1-in-12
+#: bad-step rate fires within a few arrivals
+BUDGET_FRAC = 0.05
+HORIZON = 60
+#: the incident must fire within this many steps of the first adversary
+#: arrival (arrivals start at step 0): allowed+1 bad arrivals at
+#: ADV_EVERY spacing, plus admission jitter
+DETECT_WITHIN_K = 64
+ARMS = ("clean", "adv_whole", "adv_chunked")
+
+
+def _cfg():
+    return ModelConfig(name="bench-slo", family="dense", n_layers=2,
+                       d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                       vocab=1024)
+
+
+def make_traces(rng):
+    """(steady requests, adversary requests) over the STEPS horizon."""
+    steady = [Request(rid=i, prompt=list(rng.integers(0, 1024, size=3)),
+                      max_new=STEADY_MAX_NEW, arrive_step=STEADY_EVERY * i,
+                      tenant="steady")
+              for i in range(STEPS // STEADY_EVERY)]
+    adversary = [Request(rid=10_000 + j,
+                         prompt=list(rng.integers(0, 1024,
+                                                  size=ADV_PROMPT_LEN)),
+                         max_new=ADV_MAX_NEW, arrive_step=start,
+                         tenant="adversary")
+                 for j, start in enumerate(range(0, STEPS, ADV_EVERY))]
+    return steady, adversary
+
+
+def _one_repeat(arm: str, cfg, params, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    steady, adversary = make_traces(rng)
+    tenants = {"steady": 3.0}
+    reqs = steady
+    mode = "chunked"
+    if arm != "clean":
+        tenants["adversary"] = 1.0
+        reqs = steady + adversary
+        mode = "whole" if arm == "adv_whole" else "chunked"
+
+    rec = FlightRecorder(out_dir=str(INCIDENTS_DIR))
+    monitor = SloMonitor(recorder=rec, budget_frac=BUDGET_FRAC,
+                         horizon=HORIZON)
+    b = ContinuousBatcher(cfg, params, n_slots=SLOTS, cache_len=CACHE_LEN,
+                          policy="wdlbc", tenants=tenants,
+                          prefill_chunk=ADV_PREFILL_CHUNK,
+                          prefill_mode=mode,
+                          slos={"steady": STEADY_SLO_STEPS},
+                          monitor=monitor)
+    # explicit per-step ceiling (TenantQueue.slo_cost): the derived
+    # max(2, slo/4) ceiling would flag benign chunk collisions
+    b.registry.get("steady").slo_cost = STEADY_COST_SLO
+    rec.telemetry = b.sched.telemetry
+
+    obs.enable()
+    try:
+        rec.arm()  # clears the rings: the window starts at step 0
+        b.run(reqs, max_steps=STEPS * 20)
+    finally:
+        obs.disable()
+        obs.clear()
+
+    tele = b.sched.telemetry
+    assert tele.spawns == tele.joins, \
+        (arm, "quiescence: every admitted request completed")
+    incidents = list(rec.incidents)
+    bad_cross = sum(1 for i in incidents
+                    if not i.get("crosscheck", {}).get("ok", False))
+    steady_budget = monitor.summary()["tenants"].get("steady", {})
+    return dict(
+        arm=arm, seed=seed, steps=b.stats.steps,
+        prefill_mode=mode,
+        incidents=len(incidents),
+        slo_burn_incidents=rec.count("slo_burn"),
+        incident_crosscheck_failures=bad_cross,
+        first_burn_step=steady_budget.get("first_burn_step"),
+        bad_steps=steady_budget.get("bad_steps", 0),
+        observed_steps=steady_budget.get("observed_steps", 0),
+        budget_spent=steady_budget.get("budget_spent", 0.0),
+        monitor=monitor.summary(),
+        sched=tele.summary(),
+        tenant_stats={t: s.summary()
+                      for t, s in b.tenant_stats.items()})
+
+
+def run(seed: int = 0, repeats: int = 5):
+    cfg = _cfg()
+    params = MDL.init_params(cfg, jax.random.PRNGKey(seed))
+    repeats = max(int(repeats or 5), 5)
+    bench = Bench("slo", seed=seed, repeats=repeats)
+
+    records = []
+    for rep in range(repeats):
+        for arm in ARMS:
+            r = _one_repeat(arm, cfg, params, seed + rep)
+            r["repeat"] = rep
+            records.append(r)
+
+    by = {arm: [r for r in records if r["arm"] == arm] for arm in ARMS}
+    detect = [r["first_burn_step"] for r in by["adv_whole"]
+              if r["first_burn_step"] is not None]
+    burn_rates = [r["bad_steps"] / max(1, BUDGET_FRAC * HORIZON)
+                  for r in by["adv_whole"]]
+
+    bench.add_samples("whole_detect_step", detect or [float(STEPS * 20)],
+                      unit="steps")
+    bench.add_samples("whole_burn_rate", burn_rates, unit="ratio")
+    bench.add_samples("whole_bad_steps",
+                      [float(r["bad_steps"]) for r in by["adv_whole"]],
+                      unit="steps")
+
+    # exact gates: integer incident/step counts over seeded runs
+    bench.gate_exact("clean_zero_incidents",
+                     sum(r["incidents"] for r in by["clean"]), "<=", 0)
+    bench.gate_exact("clean_zero_bad_steps",
+                     sum(r["bad_steps"] for r in by["clean"]), "<=", 0)
+    bench.gate_exact("chunked_zero_incidents",
+                     sum(r["incidents"] for r in by["adv_chunked"]),
+                     "<=", 0)
+    bench.gate_exact("whole_incident_fired",
+                     min(r["slo_burn_incidents"] for r in by["adv_whole"]),
+                     ">=", 1)
+    bench.gate_exact("detect_within_k",
+                     max(detect) if detect else float(STEPS * 20),
+                     "<=", DETECT_WITHIN_K)
+    bench.gate_exact("incident_crosscheck",
+                     sum(r["incident_crosscheck_failures"]
+                         for r in records), "<=", 0)
+
+    rows = []
+    for arm in ARMS:
+        rs = by[arm]
+        rows.append([
+            arm, rs[0]["prefill_mode"],
+            sum(r["incidents"] for r in rs),
+            sum(r["bad_steps"] for r in rs),
+            f"{max(r['budget_spent'] for r in rs):.2f}",
+            min((r["first_burn_step"] for r in rs
+                 if r["first_burn_step"] is not None), default="-"),
+            len(rs)])
+    for g in bench.gates:
+        print(f"gate {g['gate']}: value={g['value']:.3f} "
+              f"{g['op']} {g['threshold']} -> "
+              f"{'ok' if g['ok'] else 'FAIL'}")
+    out = report(
+        f"SLO burn-rate lane: adversary bursts vs DLBC chunking "
+        f"(budget {BUDGET_FRAC:.0%} x {HORIZON} steps, detect<=K="
+        f"{DETECT_WITHIN_K}, {repeats} repeats, seed {seed})",
+        rows,
+        ["arm", "prefill", "incidents", "bad_steps", "max_budget_spent",
+         "first_burn", "repeats"],
+        "slo", records, harness=bench.payload())
+    bench.check()
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+    run(seed=args.seed, repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

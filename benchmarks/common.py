@@ -25,6 +25,9 @@ from .harness import SCHEMA_VERSION
 
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
 TRACE_DIR = RESULTS_DIR / "trace"
+#: flight-recorder incident reports (bench_slo / bench_faults); CI
+#: uploads these and ``gates slo`` re-runs the embedded crosschecks
+INCIDENTS_DIR = RESULTS_DIR / "incidents"
 
 #: run-wide context set by ``benchmarks.run`` (--seed / --repeats) so
 #: every artifact records what it was measured with — trajectory diffs

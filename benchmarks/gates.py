@@ -11,6 +11,7 @@ tested outside CI)::
     python -m benchmarks.gates tenants    experiments/bench/tenants.json
     python -m benchmarks.gates serve      experiments/bench/batcher.json
     python -m benchmarks.gates faults     experiments/bench/faults.json
+    python -m benchmarks.gates slo        experiments/bench/slo.json
     python -m benchmarks.gates trace      experiments/bench
     python -m benchmarks.gates dist       experiments/bench/sched.json
     python -m benchmarks.gates trajectory experiments/bench \\
@@ -185,6 +186,85 @@ def gate_trace(results_dir) -> list:
         print(f"tracing overhead on uniform grain loop: {frac:.1%}")
         if frac > 0.05:
             bad.append(f"tracing overhead {frac:.1%} > 5% budget")
+        mfrac = gates.get("metrics_overhead_frac")
+        if mfrac is not None:  # pre-metrics artifacts lack the field
+            print(f"always-on metrics overhead on uniform grain loop: "
+                  f"{mfrac:.1%}")
+            if mfrac > 0.05:
+                bad.append(f"metrics overhead {mfrac:.1%} > 5% budget")
+    return bad
+
+
+def gate_slo(path) -> list:
+    """SLO burn-rate lane from ``slo.json``: burn verdicts re-derived
+    from the stored per-tenant bad-step counters (never trusted from the
+    producer's incident counts), zero incidents on the clean and chunked
+    arms, the stored exact/CI gates replayed, and every persisted
+    incident file's embedded trace window re-crosschecked against its
+    embedded telemetry delta — a tampered ``crosscheck.ok`` is caught by
+    re-running the conservation check, not by reading it."""
+    from repro.obs import export as obs_export
+
+    if _skip(path):
+        return []
+    env = load_envelope(path)
+    recs = [r for r in env["records"] if r.get("arm")]
+    if not recs:
+        return ["no slo records in artifact"]
+    bad = []
+    for r in recs:
+        mon = r.get("monitor", {})
+        steady = mon.get("tenants", {}).get("steady", {})
+        allowed = steady.get("allowed_bad_steps",
+                             mon.get("budget_frac", 0)
+                             * mon.get("horizon", 0))
+        bad_steps = r.get("bad_steps", 0)
+        should_fire = allowed > 0 and bad_steps > allowed
+        fired = r.get("slo_burn_incidents", 0) >= 1
+        tag = f"{r['arm']}/rep{r.get('repeat')}"
+        print(f"{tag}: bad_steps={bad_steps} allowed={allowed} "
+              f"incidents={r.get('incidents')} fired={fired}")
+        if should_fire != fired:
+            bad.append(f"{tag}: re-derived burn verdict {should_fire} "
+                       f"!= recorded incident count "
+                       f"{r.get('slo_burn_incidents', 0)} "
+                       "(burn accounting and firing disagree)")
+        if r["arm"] in ("clean", "adv_chunked") and r.get("incidents", 0):
+            bad.append(f"{tag}: {r['incidents']} incident(s) on a "
+                       "no-burn arm (false positive)")
+        if r["arm"] == "clean" and bad_steps:
+            bad.append(f"{tag}: {bad_steps} bad steps with no adversary")
+        if r.get("incident_crosscheck_failures", 0):
+            bad.append(f"{tag}: {r['incident_crosscheck_failures']} "
+                       "incident(s) failed their embedded crosscheck")
+    replayed = _replay_harness(env, label="slo")
+    if replayed is None:
+        bad.append("no harness section — bench_slo did not emit gates")
+    else:
+        bad.extend(replayed)
+    # re-run the conservation crosscheck inside every persisted incident
+    inc_dir = Path(path).parent / "incidents"
+    inc_paths = sorted(glob.glob(str(inc_dir / "incident-*.json")))
+    for ipath in inc_paths:
+        doc = json.load(open(ipath))
+        trace, window = doc.get("trace"), doc.get("telemetry_window")
+        if trace is None or window is None:
+            print(f"{os.path.basename(ipath)}: no embedded trace window "
+                  f"(trigger={doc.get('trigger')}); skipping")
+            continue
+        check = obs_export.crosscheck(trace, window)
+        stored = doc.get("crosscheck", {}).get("ok")
+        print(f"{os.path.basename(ipath)}: trigger={doc.get('trigger')} "
+              f"crosscheck ok={check['ok']}")
+        if not check["ok"]:
+            bad.append(f"{ipath}: incident window fails conservation "
+                       f"({check['mismatches']})")
+        if stored is not None and bool(stored) != bool(check["ok"]):
+            bad.append(f"{ipath}: stored crosscheck {stored} != replayed "
+                       f"{check['ok']} (artifact lied)")
+    if not inc_paths:
+        print(f"no persisted incidents under {inc_dir} (earlier step "
+              "failed or produced none)")
     return bad
 
 
@@ -472,6 +552,7 @@ GATES = {
     "tenants": gate_tenants,
     "serve": gate_serve,
     "faults": gate_faults,
+    "slo": gate_slo,
     "dist": gate_dist,
 }
 

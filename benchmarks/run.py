@@ -18,6 +18,9 @@ One benchmark per paper table/figure plus the TPU-side analogues:
   faults     — chaos lane: seeded fault injection (raises, fail-fast
                cancellation, worker death) with exact exception/item
                conservation gates and a p99-under-faults CI bound
+  slo        — SLO burn-rate lane: adversary bursts burn a tenant's
+               error budget and fire a flight-recorder incident; DLBC
+               chunking keeps the budget intact at the same load
   adoption   — sched adoption surfaces: train-step / checkpoint / MoE
                spawn-join telemetry + the DCAFE≤LC join regression gate
   design     — paper §6 DLBC design-choice study
@@ -37,8 +40,8 @@ from . import (
     bench_adoption, bench_batcher, bench_design_choices, bench_ep,
     bench_faults, bench_fig10_counts, bench_fig11_speedup,
     bench_fig12_schemes, bench_fig13_energy, bench_grain,
-    bench_moe_dispatch, bench_roofline, bench_sched, bench_sync_policy,
-    bench_tenants,
+    bench_moe_dispatch, bench_roofline, bench_sched, bench_slo,
+    bench_sync_policy, bench_tenants,
 )
 from .common import set_run_context
 
@@ -47,6 +50,7 @@ ALL = {
     "ep": bench_ep.run,
     "faults": bench_faults.run,
     "grain": bench_grain.run,
+    "slo": bench_slo.run,
     "fig10": bench_fig10_counts.run,
     "fig11": bench_fig11_speedup.run,
     "fig12": bench_fig12_schemes.run,

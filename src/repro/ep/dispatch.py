@@ -45,6 +45,8 @@ from jax.sharding import PartitionSpec as P
 from ..kernels.moe_dispatch.ops import (
     combine_tokens, dispatch_tokens, expert_ffn,
 )
+from ..obs import metrics as obs_metrics
+from ..obs import monitor as obs_monitor
 from ..obs import trace as obs
 from ..models.moe import (
     _expert_load, _positions_in_expert, capacity, dlbc_reroute, route,
@@ -315,8 +317,14 @@ def ep_round(p: dict, cfg, x, *, mesh,
         sent=stats["sent"], received=stats["received"],
         reassigned=stats["reassigned"], dropped=stats["dropped"],
         completed=1, degraded=1 if dead else 0)
+    obs_metrics.counter("ep.rounds").inc()
     # scalar stats only (benches/tests cast every value): degraded is a
     # 0/1 flag, dead_shards the count of lanes closed this round
     stats["degraded"] = int(bool(dead))
     stats["dead_shards"] = len(dead)
+    if dead:
+        obs_metrics.counter("ep.degraded_rounds").inc()
+        # flight-recorder trigger: the round COMPLETED, but it ran with
+        # lanes closed — dump the window while the evidence is fresh
+        obs_monitor.on_ep_degraded(dead)
     return y, stats

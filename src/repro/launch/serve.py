@@ -105,11 +105,22 @@ def main(argv=None):
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record an obs span trace of the run and write "
                          "Chrome trace-event JSON here (Perfetto-loadable)")
+    ap.add_argument("--metrics-json", default=None, metavar="OUT.jsonl",
+                    help="stream windowed metrics-registry snapshots "
+                         "(JSON lines, one delta per interval) here")
+    ap.add_argument("--metrics-interval", type=float, default=0.5,
+                    help="snapshot interval in seconds for --metrics-json")
     args = ap.parse_args(argv)
 
     if args.trace:
         from ..obs import trace as obs_trace
         obs_trace.enable()
+    snapshotter = None
+    if args.metrics_json:
+        from ..obs.metrics import Snapshotter
+        snapshotter = Snapshotter(interval_s=args.metrics_interval,
+                                  path=args.metrics_json)
+        snapshotter.start()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = MDL.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -118,7 +129,11 @@ def main(argv=None):
     batcher = ContinuousBatcher(cfg, params, n_slots=args.slots,
                                 cache_len=args.cache_len,
                                 policy=args.policy, tenants=tenants)
-    stats = batcher.run(reqs)
+    try:
+        stats = batcher.run(reqs)
+    finally:
+        if snapshotter is not None:
+            snapshotter.stop()
     # Fig. 10-comparable spawn/join telemetry from the slot scheduler
     telemetry = batcher.sched.telemetry.summary()
     out = {

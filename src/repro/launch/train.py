@@ -42,11 +42,22 @@ def main(argv=None):
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record an obs span trace of the run and write "
                          "Chrome trace-event JSON here (Perfetto-loadable)")
+    ap.add_argument("--metrics-json", default=None, metavar="OUT.jsonl",
+                    help="stream windowed metrics-registry snapshots "
+                         "(JSON lines, one delta per interval) here")
+    ap.add_argument("--metrics-interval", type=float, default=1.0,
+                    help="snapshot interval in seconds for --metrics-json")
     args = ap.parse_args(argv)
 
     if args.trace:
         from ..obs import trace as obs_trace
         obs_trace.enable()
+    snapshotter = None
+    if args.metrics_json:
+        from ..obs.metrics import Snapshotter
+        snapshotter = Snapshotter(interval_s=args.metrics_interval,
+                                  path=args.metrics_json)
+        snapshotter.start()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train",
@@ -58,7 +69,11 @@ def main(argv=None):
     tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
                          ckpt_dir=args.ckpt_dir, failure_at=args.failure_at,
                          ckpt_sched_policy=args.ckpt_sched_policy)
-    rep = run_training(cfg, shape, tcfg, scfg, AdamWConfig())
+    try:
+        rep = run_training(cfg, shape, tcfg, scfg, AdamWConfig())
+    finally:
+        if snapshotter is not None:
+            snapshotter.stop()
     out = {
         "arch": cfg.name, "completed": rep.completed,
         "resumed_from": rep.resumed_from,

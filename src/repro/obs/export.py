@@ -48,14 +48,23 @@ WORKER_CATS = ("worker",)
 
 
 def chrome_trace(events: Optional[List[Dict]] = None,
-                 extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+                 extra: Optional[Dict[str, Any]] = None,
+                 include_open: bool = True) -> Dict[str, Any]:
     """Snapshot (or take) raw events and render Chrome trace-event JSON.
 
     Timestamps are microseconds (the format's unit), rebased to the
     earliest event so traces start near t=0 in a viewer.
+
+    When snapshotting (``events is None``), spans still open at export
+    time are swept in as truncated spans (``"trunc": true``, end = now)
+    — an atexit/incident export must show what was in flight, not drop
+    it.  Truncated spans never carry counter instants, so they cannot
+    disturb the conservation cross-check.
     """
     if events is None:
         events = _trace.snapshot()
+        if include_open:
+            events = events + _trace.open_span_events()
     t0 = min((e["ts_ns"] for e in events), default=0)
     out: List[Dict[str, Any]] = []
     threads = {}
@@ -68,6 +77,9 @@ def chrome_trace(events: Optional[List[Dict]] = None,
         }
         if e["ph"] == "X":
             rec["dur"] = e["dur_ns"] / 1e3
+            if e.get("trunc"):
+                rec["trunc"] = True
+                rec["args"]["trunc"] = True  # survives viewer round-trips
         else:
             rec["s"] = "t"  # instant scope: thread
         out.append(rec)

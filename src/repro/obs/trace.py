@@ -76,7 +76,8 @@ class Ring:
     beyond the event tuple itself.
     """
 
-    __slots__ = ("events", "capacity", "idx", "dropped", "tid", "name")
+    __slots__ = ("events", "capacity", "idx", "dropped", "tid", "name",
+                 "open_spans")
 
     def __init__(self, capacity: int, tid: int, name: str):
         self.events: List[Tuple] = []
@@ -85,6 +86,10 @@ class Ring:
         self.dropped = 0
         self.tid = tid
         self.name = name
+        #: spans entered but not yet exited on this thread (LIFO).  An
+        #: export sweeps these into truncated spans so a crash/incident
+        #: dump shows what was in flight, instead of dropping them.
+        self.open_spans: List["_Span"] = []
 
     def emit(self, ev: Tuple):
         evs = self.events
@@ -175,7 +180,7 @@ def complete_span(cat: str, name: str, t0_ns: int,
 
 
 class _Span:
-    __slots__ = ("cat", "name", "args", "t0")
+    __slots__ = ("cat", "name", "args", "t0", "_ring")
 
     def __init__(self, cat: str, name: str, args):
         self.cat = cat
@@ -183,10 +188,25 @@ class _Span:
         self.args = args
 
     def __enter__(self):
+        r = _ring()
+        self._ring = r
         self.t0 = perf_counter_ns()
+        r.open_spans.append(self)
         return self
 
     def __exit__(self, *exc):
+        # De-register from the ring we registered on (a clear() between
+        # enter and exit leaves a stale ring — removal is then a no-op on
+        # a discarded object, which is the right outcome: cleared spans
+        # are gone).  Spans nest LIFO per thread, so pop is the fast path.
+        ops = self._ring.open_spans
+        if ops and ops[-1] is self:
+            ops.pop()
+        else:  # clear() raced us, or exit out of order
+            try:
+                ops.remove(self)
+            except ValueError:
+                pass
         if _ENABLED:  # re-check: disable() mid-span drops the event
             _ring().emit(("X", self.t0, perf_counter_ns() - self.t0,
                           self.cat, self.name, 1, self.args))
@@ -228,6 +248,24 @@ def snapshot() -> List[Dict[str, Any]]:
             out.append(dict(ph=ph, ts_ns=ts, dur_ns=dur, cat=cat,
                             name=name, n=n, args=args, tid=r.tid,
                             thread=r.name))
+    return out
+
+
+def open_span_events(end_ns: Optional[int] = None) -> List[Dict[str, Any]]:
+    """Spans currently in flight, as *truncated* span events: same shape
+    as :func:`snapshot` entries plus ``trunc=True``, with the end forced
+    to now (or ``end_ns``).  An export that only read the rings would
+    silently drop whatever was mid-flight at shutdown or at an incident
+    — exactly the spans a crash dump needs most."""
+    end = perf_counter_ns() if end_ns is None else end_ns
+    with _reg_lock:
+        rings = list(_rings)
+    out = []
+    for r in rings:
+        for sp in list(r.open_spans):
+            out.append(dict(ph="X", ts_ns=sp.t0, dur_ns=max(0, end - sp.t0),
+                            cat=sp.cat, name=sp.name, n=1, args=sp.args,
+                            tid=r.tid, thread=r.name, trunc=True))
     return out
 
 

@@ -57,5 +57,5 @@ from .faults import (  # noqa: F401
 )
 from .telemetry import (  # noqa: F401
     ExchangeCounters, LogHistogram, SchedCounters, SchedTelemetry,
-    percentile,
+    diff_counters, percentile,
 )

@@ -29,6 +29,8 @@ from dataclasses import dataclass
 from itertools import count
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from ..obs import metrics as obs_metrics
+from ..obs import monitor as obs_monitor
 from ..obs import trace as obs
 from . import faults
 from .capacity import PoolCapacity, SlotCapacity
@@ -44,6 +46,13 @@ from .tenancy import TenantRegistry, ensure_weighted
 # (join_stall, park, steal latency) are cat="sched".  Every emit is a
 # single module-flag read when tracing is disabled.
 
+
+#: Always-on metrics plane (repro.obs.metrics): handles are looked up
+#: once here, then bumped per LOOP (never per item) — the same
+#: scheduling-edge granularity that keeps tracing inside its 5% budget.
+_MX_LOOPS = obs_metrics.counter("sched.loops")
+_MX_ITEMS = obs_metrics.counter("sched.items")
+_MX_LOOP_S = obs_metrics.histogram("sched.loop_s")
 
 #: Max TaskErrors *stored* per waitable (latch / task event).  Counts
 #: stay exact past the cap — ``MultipleExceptions.count`` and the
@@ -292,6 +301,13 @@ class FinishScope:
     def add(self, events: Sequence[Any]):
         self._events.extend(events)
 
+    def pending(self) -> int:
+        """Non-blocking probe: waitables added but not yet fired.  The
+        stall watchdog (repro.obs.monitor) polls this from its own
+        thread, so a scope wedged with no one in ``wait()`` is still
+        observable from outside."""
+        return sum(1 for e in self._events if not e.is_set())
+
     def wait(self, timeout: Optional[float] = None) -> JoinOutcome:
         """Join with a deadline and a typed outcome.  On timeout the
         scope keeps its events (nothing is discharged, no join is
@@ -310,6 +326,8 @@ class FinishScope:
                     if left <= 0 or not ev.wait(max(0.0, left)):
                         pending = sum(1 for e in self._events
                                       if not e.is_set())
+                        obs_monitor.on_join_timeout(self, pending,
+                                                    timeout or 0.0)
                         return JoinOutcome("timeout", pending=pending)
         errors, total = _collect_errors(self._events)
         self._events.clear()
@@ -318,6 +336,7 @@ class FinishScope:
                 self.telemetry.joins += 1
             obs.instant("sched", "join")
         if total:
+            obs_monitor.on_join_failed(self, total)
             return JoinOutcome("failed", tuple(errors), total)
         return JoinOutcome("done")
 
@@ -535,6 +554,20 @@ class ThreadExecutor:
     def run_loop(self, items: Sequence, fn: Callable,
                  policy: Union[str, SchedPolicy, None] = None,
                  scope: Optional[FinishScope] = None) -> None:
+        """Timed entry point — see :meth:`_run_loop` for the policy
+        semantics.  The always-on metrics plane records one bump set
+        per loop (count, item volume, wall time), never per item."""
+        _MX_LOOPS.inc()
+        _MX_ITEMS.inc(len(items))
+        mt0 = time.perf_counter()
+        try:
+            self._run_loop(items, fn, policy, scope)
+        finally:
+            _MX_LOOP_S.observe(time.perf_counter() - mt0)
+
+    def _run_loop(self, items: Sequence, fn: Callable,
+                  policy: Union[str, SchedPolicy, None] = None,
+                  scope: Optional[FinishScope] = None) -> None:
         """Execute ``fn(item)`` for every item under the given policy.
 
         This is the paper's three-block loop: the policy's ``decide``
@@ -617,6 +650,8 @@ class ThreadExecutor:
                     obs.instant("sched", "join")
                     errors, total = _collect_errors(events)
                     if total:  # the per-loop finish rethrows (X10)
+                        obs_monitor.on_join_failed(self, total,
+                                                   site="sched.loop")
                         raise MultipleExceptions(errors, total)
                 return
             # serial block with periodic capacity re-probe (cadence counts

@@ -30,6 +30,35 @@ from typing import Deque, Dict, Iterable, List, Optional
 LATENCY_WINDOW = 8192
 
 
+def diff_counters(new: Dict, old: Dict) -> Dict:
+    """Windowed counter delta between two :meth:`counters_snapshot`
+    dicts (``new`` taken after ``old``).  Nested dicts
+    (``errors_by_site``, ``exchange``) subtract per key; keys whose
+    delta is zero are dropped from nested maps so an incident window
+    only reports the sites that moved *inside* it.  Raises if any
+    monotone counter would go backwards — that means the snapshots are
+    from different telemetry objects (or one was reset mid-window)."""
+    out: Dict = {}
+    for key, nv in new.items():
+        ov = old.get(key)
+        if isinstance(nv, dict):
+            sub = {k: v - (ov or {}).get(k, 0) for k, v in nv.items()}
+            if any(v < 0 for v in sub.values()):
+                raise ValueError(
+                    f"diff_counters: {key} went backwards ({sub})")
+            sub = {k: v for k, v in sub.items() if v}
+            if sub:
+                out[key] = sub
+        else:
+            d = nv - (ov or 0)
+            if d < 0:
+                raise ValueError(
+                    f"diff_counters: {key} went backwards "
+                    f"({nv} < {ov})")
+            out[key] = d
+    return out
+
+
 def percentile(data: Iterable[float], p: float) -> float:
     """Linear-interpolated percentile (numpy-compatible, dependency-free)."""
     data = list(data)
@@ -97,6 +126,10 @@ class LogHistogram:
         return self
 
     def merge(self, other: "LogHistogram") -> "LogHistogram":
+        if len(other.counts) != len(self.counts):
+            raise ValueError(
+                f"LogHistogram bucket-count mismatch: cannot merge "
+                f"{len(other.counts)} buckets into {len(self.counts)}")
         for k, c in enumerate(other.counts):
             self.counts[k] += c
         self.n += other.n
@@ -104,6 +137,52 @@ class LogHistogram:
         self.min = min(self.min, other.min)
         self.max = max(self.max, other.max)
         return self
+
+    def copy(self) -> "LogHistogram":
+        """Snapshot for windowed diffing (``new.diff(old)``)."""
+        out = LogHistogram()
+        out.counts = list(self.counts)
+        out.n = self.n
+        out.total = self.total
+        out.min = self.min
+        out.max = self.max
+        return out
+
+    def diff(self, older: "LogHistogram") -> "LogHistogram":
+        """The per-interval histogram between two cumulative snapshots:
+        ``newer.diff(older)`` subtracts bucket counts, so windowed
+        p50/p99 come from snapshot diffing — never from resetting a
+        live histogram under its writers.  Raises if ``older`` is not
+        actually an earlier snapshot of the same cumulative series
+        (negative bucket counts) or bucket geometries differ.
+
+        The window's exact min/max are not recoverable from cumulative
+        state; the diff bounds them by its own nonzero buckets, clamped
+        by the cumulative extrema — percentiles keep the usual
+        upper-bucket-edge contract."""
+        if len(older.counts) != len(self.counts):
+            raise ValueError(
+                f"LogHistogram bucket-count mismatch: cannot diff "
+                f"{len(self.counts)} buckets against {len(older.counts)}")
+        out = LogHistogram()
+        lo_k = hi_k = None
+        for k, (a, b) in enumerate(zip(self.counts, older.counts)):
+            d = a - b
+            if d < 0:
+                raise ValueError(
+                    f"LogHistogram.diff: bucket {k} would go negative "
+                    f"({a} - {b}) — 'older' is not an earlier snapshot")
+            out.counts[k] = d
+            if d:
+                lo_k = k if lo_k is None else lo_k
+                hi_k = k
+        out.n = self.n - older.n
+        out.total = self.total - older.total
+        if out.n:
+            lo_edge = self.bucket_edge_s(lo_k - 1) if lo_k > 0 else 0.0
+            out.min = max(lo_edge, self.min if self.min != math.inf else 0.0)
+            out.max = min(self.bucket_edge_s(hi_k), self.max)
+        return out
 
     def percentile(self, p: float) -> float:
         """Upper bucket edge at percentile ``p`` (a ≤2× overestimate —
@@ -440,6 +519,32 @@ class SchedTelemetry(SchedCounters):
         if self.exchange.posted or self.exchange.completed:
             # only EP dispatch surfaces grow it
             out["exchange"] = self.exchange.summary()
+        return out
+
+    def counters_snapshot(self) -> Dict:
+        """Cheap point-in-time copy of the monotone counters, in the
+        shape :func:`repro.obs.export.crosscheck` understands.  Two
+        snapshots diff (:func:`diff_counters`) into a *windowed* summary
+        — the flight recorder crosschecks an incident's trace window
+        against exactly such a delta, and the metrics plane derives
+        per-interval rates the same way.  Taken under ``lock`` so a
+        snapshot never tears a multi-field bump."""
+        with self.lock:
+            out: Dict = dict(
+                spawns=self.spawns, joins=self.joins, steals=self.steals,
+                splits=self.splits, completions=self.completions,
+                errors=self.errors, cancelled=self.cancelled,
+                retries=self.retries, worker_deaths=self.worker_deaths,
+                prefill_chunks=self.prefill_chunks,
+                prefill_tokens=self.prefill_tokens,
+            )
+            if self.errors_by_site:
+                out["errors_by_site"] = dict(self.errors_by_site)
+            ex = self.exchange
+            if ex.posted or ex.completed:
+                out["exchange"] = dict(posted=ex.posted,
+                                       completed=ex.completed,
+                                       degraded_rounds=ex.degraded_rounds)
         return out
 
     def to_json(self) -> str:

@@ -63,6 +63,13 @@ class TenantQueue:
     #: a request still running ``slo_steps`` after arrival is expired so
     #: its slot frees for the tenant's queue instead of stalling it.
     slo_steps: int = 0
+    #: per-token decode-cost ceiling in vtime steps (0 = derive from
+    #: ``slo_steps``): the SLO monitor (repro.obs.monitor) counts a step
+    #: whose decode cost exceeds this as burning the tenant's error
+    #: budget — pure decode costs 1, a co-scheduled whole-prompt prefill
+    #: costs ≈ 1 + prompt_len, which is the violation DLBC chunking
+    #: exists to prevent.
+    slo_cost: float = 0.0
 
     def __post_init__(self):
         if self.weight <= 0:

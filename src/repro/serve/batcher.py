@@ -96,13 +96,20 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import model as MDL
+from ..obs import metrics as obs_metrics
 from ..obs import trace as obs
+from ..obs.monitor import SloMonitor
 from ..sched import faults
 from ..sched.executors import FinishScope, RangeLatch, SlotExecutor
 from ..sched.faults import RetryPolicy
 from ..sched.policy import SchedPolicy
 from ..sched.telemetry import percentile
 from ..sched.tenancy import TenantRegistry, WeightedRefillPolicy
+
+#: always-on metrics plane: one bump set per STEP, never per token
+_MX_SERVE_STEPS = obs_metrics.counter("serve.steps")
+_MX_QUEUE_DEPTH = obs_metrics.gauge("serve.queue_depth")
+_MX_STEP_COST = obs_metrics.gauge("serve.step_cost")
 
 
 @dataclass
@@ -211,7 +218,8 @@ class ContinuousBatcher:
                  prefill_chunk: int = 32,
                  prefill_mode: str = "chunked",
                  retry: Optional[RetryPolicy] = None,
-                 slos: Optional[Dict[str, int]] = None):
+                 slos: Optional[Dict[str, int]] = None,
+                 monitor: Optional[SloMonitor] = None):
         assert isinstance(policy, SchedPolicy) \
             or policy in ("dlbc", "lc", "wdlbc")
         assert prefill_mode in ("chunked", "whole"), prefill_mode
@@ -245,6 +253,9 @@ class ContinuousBatcher:
         #: frees either way, so one tenant's poison never stalls another
         #: tenant's decode
         self.retry = retry if retry is not None else RetryPolicy(attempts=3)
+        #: per-tenant SLO burn-rate monitor (repro.obs.monitor): fed once
+        #: per step; ``None`` costs one attribute read per step
+        self.monitor = monitor
         #: tenant → SLO deadline in decode steps (0/absent = none);
         #: merged with any ``TenantQueue.slo_steps`` set on the registry
         self.slos: Dict[str, int] = dict(slos or {})
@@ -555,6 +566,7 @@ class ContinuousBatcher:
                       if r is not None]
         if not active:
             self.vtime += 1
+            self._post_step(now, 0)
             return
         prefill_cost = 0
         if self._prefilling:
@@ -651,6 +663,17 @@ class ContinuousBatcher:
                     self.slot_req[i] = None
                     self.slot_pos[i] = 0
         self.vtime += max(1, step_cost)
+        self._post_step(now, step_cost)
+
+    def _post_step(self, now: int, step_cost: int):
+        """Once per step: feed the always-on metrics plane and (when
+        attached) the per-tenant SLO burn-rate monitor."""
+        _MX_SERVE_STEPS.inc()
+        _MX_QUEUE_DEPTH.set(self.queued())
+        if step_cost:
+            _MX_STEP_COST.set(step_cost)
+        if self.monitor is not None:
+            self.monitor.observe(self, now)
 
     # -- driving --------------------------------------------------------------
 

@@ -35,6 +35,7 @@ from ..ckpt.checkpoint import CheckpointManager
 from ..configs.base import ModelConfig, ShapeConfig
 from ..data.pipeline import DataConfig, SyntheticPipeline
 from ..models import model as MDL
+from ..obs import metrics as obs_metrics
 from ..obs import trace as obs
 from ..sched import SchedTelemetry
 from .optimizer import AdamWConfig, init_opt_state
@@ -71,6 +72,15 @@ class TrainReport:
 
 class SimulatedFailure(RuntimeError):
     pass
+
+
+# Metrics-plane handles (looked up once; bumped once per training step —
+# the same per-scheduling-edge discipline as the sched.* handles).
+_MX_STEPS = obs_metrics.counter("train.steps")
+_MX_STRAGGLERS = obs_metrics.counter("train.stragglers")
+_MX_STEP_S = obs_metrics.histogram("train.step_s")
+_MX_LOSS = obs_metrics.gauge("train.loss")
+_MX_GRAD_NORM = obs_metrics.gauge("train.grad_norm")
 
 
 def run_training(cfg: ModelConfig, shape: ShapeConfig,
@@ -150,6 +160,10 @@ def run_training(cfg: ModelConfig, shape: ShapeConfig,
             dt = time.perf_counter() - t0
             times.append(dt)
             report.step_times.append(dt)
+            _MX_STEPS.inc()
+            _MX_STEP_S.observe(dt)
+            if report.losses:
+                _MX_LOSS.set(report.losses[-1])
             step_tel.spawns += sched_counts["spawns"]
             step_tel.joins += sched_counts["joins"]
             # which arm executed the microbatches (run_loop semantics)
@@ -159,11 +173,13 @@ def run_training(cfg: ModelConfig, shape: ShapeConfig,
                 step_tel.serial_items += max(1, shape.microbatches)
             step_tel.record_latency(dt)
             report.grad_norms.append(float(metrics["grad_norm"]))
+            _MX_GRAD_NORM.set(report.grad_norms[-1])
             # straggler detection
             if len(times) >= 5:
                 med = float(np.median(times[-20:]))
                 if dt > tcfg.straggler_factor * med:
                     report.stragglers += 1
+                    _MX_STRAGGLERS.inc()
             if (step + 1) % tcfg.ckpt_every == 0 or step + 1 == tcfg.steps:
                 with obs.trace_span("train", "ckpt", {"step": step + 1}
                                     if obs.enabled() else None):

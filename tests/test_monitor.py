@@ -1,0 +1,427 @@
+"""repro.obs metrics plane + monitor: registry snapshots/deltas, the
+flight recorder's windowed crosscheck, the per-tenant SLO burn-rate
+monitor, and the stall watchdog under seeded fault injection."""
+
+import json
+import time
+from contextlib import nullcontext
+
+import pytest
+
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import monitor as obs_monitor
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry, Snapshotter
+from repro.obs.monitor import (
+    FlightRecorder, SloMonitor, StallWatchdog, recording,
+)
+from repro.sched import (
+    MultipleExceptions, SchedTelemetry, WorkStealingExecutor,
+)
+from repro.sched.faults import FaultPlan, FaultSpec, injected_faults
+
+
+@pytest.fixture(autouse=True)
+def _obs_reset():
+    """Metrics stay enabled (the default-on contract), the tracer stays
+    off, and no recorder leaks between tests."""
+    obs_metrics.enable()
+    obs.disable()
+    obs.clear()
+    obs_monitor.uninstall()
+    yield
+    obs_metrics.enable()
+    obs.disable()
+    obs.clear()
+    obs_monitor.uninstall()
+
+
+# -- metrics registry ---------------------------------------------------------
+
+def test_counter_gauge_histogram_snapshot_delta():
+    reg = MetricsRegistry()
+    c, g, h = reg.counter("t.c"), reg.gauge("t.g"), reg.histogram("t.h_s")
+    c.inc(3)
+    g.set(7.5)
+    h.observe(1e-3)
+    older = reg.snapshot()
+    c.inc(2)
+    g.set(9.0)
+    h.observe(5e-2)
+    h.observe(5e-2)
+    d = reg.snapshot().delta(older)
+    assert d["counters"]["t.c"] == 2
+    assert d["gauges"]["t.g"] == 9.0
+    w = d["hists"]["t.h_s"]
+    # only the window's two 50ms observations, not the cumulative three
+    assert w["n"] == 2
+    assert 50.0 <= w["p50_ms"] <= 110.0
+    assert d["rates"]["t.c"] > 0
+
+
+def test_registry_handles_are_singletons():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    assert reg.gauge("y") is reg.gauge("y")
+    assert reg.histogram("z") is reg.histogram("z")
+
+
+def test_disable_stops_bumps():
+    reg = MetricsRegistry()
+    c = reg.counter("d.c")
+    c.inc()
+    obs_metrics.disable()
+    c.inc(100)
+    reg.gauge("d.g").set(5.0)
+    reg.histogram("d.h").observe(1.0)
+    obs_metrics.enable()
+    snap = reg.snapshot()
+    assert snap.counters["d.c"] == 1
+    assert snap.gauges["d.g"] == 0.0
+    assert snap.hists["d.h"].n == 0
+
+
+def test_pull_source_sampled_into_gauges():
+    reg = MetricsRegistry()
+    reg.add_source("tel", lambda: {"spawns": 4, "joins": 4})
+    snap = reg.snapshot()
+    assert snap.gauges["tel.spawns"] == 4
+    reg.remove_source("tel")
+    assert "tel.spawns" not in reg.snapshot().gauges
+
+
+def test_broken_source_reports_not_raises():
+    reg = MetricsRegistry()
+    reg.add_source("bad", lambda: 1 / 0)
+    snap = reg.snapshot()
+    assert snap.gauges["bad.source_error"] == 1.0
+
+
+def test_snapshotter_sample_and_jsonl(tmp_path):
+    reg = MetricsRegistry()
+    c = reg.counter("s.c")
+    path = tmp_path / "metrics.jsonl"
+    snap = Snapshotter(reg, interval_s=60.0, path=str(path), capacity=4)
+    snap.start()
+    try:
+        c.inc(5)
+        rec = snap.sample()
+        assert rec["counters"]["s.c"] == 5
+        c.inc(2)
+        rec = snap.sample()
+        assert rec["counters"]["s.c"] == 2  # the window, not cumulative
+        for _ in range(10):
+            snap.sample()
+        assert len(snap.records) == 4  # bounded ring
+    finally:
+        snap.stop()
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(lines) >= 12
+    assert lines[0]["counters"]["s.c"] == 5
+
+
+def test_executor_feeds_default_registry():
+    before = obs_metrics.snapshot()
+    ex = WorkStealingExecutor(n_workers=2)
+    try:
+        ex.run_loop(list(range(16)), lambda x: x)
+    finally:
+        ex.shutdown()
+    d = obs_metrics.snapshot().delta(before)
+    assert d["counters"]["sched.loops"] == 1
+    assert d["counters"]["sched.items"] == 16
+    assert d["hists"]["sched.loop_s"]["n"] == 1
+
+
+# -- flight recorder ----------------------------------------------------------
+
+def test_record_requires_known_trigger():
+    rec = FlightRecorder()
+    with pytest.raises(ValueError):
+        rec.record("made_up", "nope")
+
+
+def test_record_basic_report_and_persistence(tmp_path):
+    tel = SchedTelemetry()
+    rec = FlightRecorder(telemetry=tel, out_dir=str(tmp_path))
+    rec.arm()
+    tel.spawns += 3
+    tel.joins += 1
+    rep = rec.record("join_stall", "test stall", scope="s", site="x",
+                     extra={"pending": 2})
+    assert rep["schema"] == obs_monitor.INCIDENT_SCHEMA
+    assert rep["trigger"] == "join_stall"
+    assert rep["implicated"] == {"scope": "s", "site": "x"}
+    assert rep["telemetry_window"]["spawns"] == 3
+    assert rep["telemetry_window"]["joins"] == 1
+    assert rec.count() == 1 and rec.count("join_stall") == 1
+    files = list(tmp_path.glob("incident-*.json"))
+    assert len(files) == 1
+    on_disk = json.loads(files[0].read_text())
+    assert on_disk["trigger"] == "join_stall"
+
+
+def test_rate_limit_suppresses_refire():
+    rec = FlightRecorder(min_interval_s=60.0)
+    assert rec.record("ep_degraded", "one") is not None
+    assert rec.record("ep_degraded", "two") is None  # suppressed
+    assert rec.record("join_stall", "other trigger") is not None
+    assert rec.count() == 2
+
+
+def test_windowed_crosscheck_on_traced_incident():
+    obs.enable()
+    tel = SchedTelemetry()
+    ex = WorkStealingExecutor(n_workers=2, telemetry=tel)
+    rec = FlightRecorder(telemetry=tel)
+    try:
+        ex.run_loop(list(range(32)), lambda x: x)  # pre-window noise
+        rec.arm()  # clears rings + baselines counters HERE
+        ex.run_loop(list(range(16)), lambda x: x)
+        rep = rec.record("join_stall", "synthetic window test")
+    finally:
+        ex.shutdown()
+    # the window covers only the second loop, and its embedded trace
+    # must re-derive exactly the windowed counter delta
+    assert rep["crosscheck"]["ok"], rep["crosscheck"]["mismatches"]
+    assert rep["telemetry_window"]["spawns"] > 0
+    assert (rep["telemetry_window"]["spawns"]
+            < tel.counters_snapshot()["spawns"])
+
+
+def test_join_failure_fires_multiple_exceptions_incident():
+    tel = SchedTelemetry()
+    ex = WorkStealingExecutor(n_workers=2, telemetry=tel)
+    plan = FaultPlan([FaultSpec(site="sched.item", kind="raise", every=4)],
+                     seed=7)
+    rec = FlightRecorder(telemetry=tel)
+    try:
+        with recording(rec), injected_faults(plan):
+            rec.arm()
+            with pytest.raises(MultipleExceptions):
+                with ex.finish() as scope:
+                    ex.run_loop(list(range(16)), lambda x: None,
+                                scope=scope)
+    finally:
+        ex.shutdown()
+    assert rec.count("multiple_exceptions") == 1
+    (rep,) = rec.incidents
+    assert rep["extra"]["error_count"] == plan.injected_total(kind="raise")
+    assert rep["telemetry_window"]["errors"] == rep["extra"]["error_count"]
+
+
+def test_no_recorder_installed_hooks_are_noops():
+    # the default-off contract: hooks cost one global read and return
+    obs_monitor.on_join_failed(object(), 3)
+    obs_monitor.on_join_timeout(object(), 1, 0.5)
+    obs_monitor.on_ep_degraded({2, 0})
+
+
+def test_ep_degraded_hook_shapes_report():
+    rec = FlightRecorder()
+    with recording(rec):
+        obs_monitor.on_ep_degraded({3, 1}, round_errors=2)
+    (rep,) = rec.incidents
+    assert rep["trigger"] == "ep_degraded"
+    assert rep["implicated"]["shard"] == 1
+    assert rep["extra"]["dead_shards"] == [1, 3]
+    assert rep["extra"]["round_errors"] == 2
+
+
+# -- stall watchdog -----------------------------------------------------------
+
+SEEDS = range(5)
+
+
+def _run_watched(plan, deadline_s, n_items=32, item_s=1e-4):
+    """One executor pass with the scope under watchdog watch; returns
+    (watchdog, recorder, telemetry)."""
+    tel = SchedTelemetry()
+    ex = WorkStealingExecutor(n_workers=2, telemetry=tel)
+    rec = FlightRecorder(telemetry=tel)
+    dog = StallWatchdog(recorder=rec, poll_s=0.005)
+    try:
+        with injected_faults(plan) if plan is not None else nullcontext():
+            with ex.finish() as scope:
+                dog.watch(scope, deadline_s, label="test-scope")
+                # dcafe: the join escapes into the watched scope, so
+                # pending() reflects the in-flight chunk waitables
+                ex.run_loop(n_items * [item_s], time.sleep,
+                            policy="dcafe", scope=scope)
+        dog.scan()  # quiesced scopes drop from the watch list
+    finally:
+        dog.stop()
+        ex.shutdown()
+    return dog, rec, tel
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_watchdog_clean_run_no_false_positives(seed):
+    dog, rec, _ = _run_watched(None, deadline_s=30.0)
+    assert dog.fired == 0
+    assert rec.count() == 0
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_watchdog_slow_fault_fires_exactly_once(seed):
+    # one injected 0.3s stall vs a 0.05s join deadline: the watchdog
+    # must fire exactly one join_stall incident, every seed
+    plan = FaultPlan([FaultSpec(site="sched.item", kind="slow",
+                                delay_s=0.3, every=1, max_injections=1)],
+                     seed=seed)
+    dog, rec, _ = _run_watched(plan, deadline_s=0.05)
+    assert dog.fired == 1
+    assert rec.count("join_stall") == 1
+    (rep,) = rec.incidents
+    assert rep["implicated"]["scope"] == "test-scope"
+    assert rep["extra"]["pending"] >= 1
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_watchdog_worker_death_recovers_before_deadline(seed):
+    # a worker dies, but recovery re-places its queued work well inside
+    # the generous deadline: the death is counted, no stall incident —
+    # the watchdog watches outcomes, not failures
+    plan = FaultPlan([FaultSpec(site="sched.worker", kind="worker_death",
+                                every=1, max_injections=1)], seed=seed)
+    dog, rec, tel = _run_watched(plan, deadline_s=30.0)
+    assert tel.worker_deaths == 1
+    assert dog.fired == 0
+    assert rec.count() == 0
+
+
+def test_watchdog_scan_is_deterministic_without_thread():
+    class _Stuck:
+        def pending(self):
+            return 2
+
+    rec = FlightRecorder()
+    dog = StallWatchdog(recorder=rec, poll_s=3600.0)  # thread inert
+    dog.watch(_Stuck(), deadline_s=0.0, label="stuck")
+    time.sleep(0.001)  # move past the zero deadline
+    assert dog.scan() == 1
+    assert dog.scan() == 0  # at most once per watched scope
+    assert rec.count("join_stall") == 1
+    dog.stop()
+
+
+# -- SLO burn-rate monitor ----------------------------------------------------
+
+class _FakeStats:
+    def __init__(self):
+        self.decode_step_costs = []
+        self.failed = 0
+        self.expired = 0
+
+
+class _FakeTenant:
+    def __init__(self, slo_cost=0.0):
+        self.queue = []
+        self.slo_cost = slo_cost
+
+
+class _FakeRegistry:
+    def __init__(self, tenants):
+        self._tenants = tenants
+
+    def names(self):
+        return list(self._tenants)
+
+    def get(self, name):
+        return self._tenants[name]
+
+
+class _FakeBatcher:
+    """The duck-typed surface SloMonitor.observe consumes."""
+
+    def __init__(self, slos, slo_cost=0.0):
+        self.slos = slos
+        self.registry = _FakeRegistry(
+            {n: _FakeTenant(slo_cost) for n in slos})
+        self.tenant_stats = {n: _FakeStats() for n in slos}
+        self.stats = _FakeStats()
+        self.queue = []
+
+    def _slo_of(self, name):
+        return self.slos.get(name, 0)
+
+
+def test_slo_monitor_clean_burns_nothing():
+    rec = FlightRecorder()
+    mon = SloMonitor(recorder=rec, budget_frac=0.1, horizon=20)
+    b = _FakeBatcher({"steady": 40})
+    for step in range(50):
+        b.tenant_stats["steady"].decode_step_costs.append(1.0)
+        mon.observe(b, step)
+    t = mon.summary()["tenants"]["steady"]
+    assert t["bad_steps"] == 0 and t["budget_spent"] == 0.0
+    assert rec.count() == 0
+
+
+def test_slo_monitor_burn_fires_exactly_once():
+    rec = FlightRecorder()
+    mon = SloMonitor(recorder=rec, budget_frac=0.1, horizon=20)  # allow 2
+    b = _FakeBatcher({"steady": 40})  # derived ceiling max(2, 10) = 10
+    st = b.tenant_stats["steady"]
+    fired_at = None
+    for step in range(12):
+        st.decode_step_costs.append(50.0)  # every step is bad
+        mon.observe(b, step)
+        if fired_at is None and mon.incidents_fired:
+            fired_at = step
+    assert fired_at == 2  # 3rd bad step exceeds the 2-step budget
+    assert mon.incidents_fired == 1  # never re-fires
+    assert rec.count("slo_burn") == 1
+    (rep,) = rec.incidents
+    assert rep["implicated"]["tenant"] == "steady"
+    assert rep["extra"]["burn_rate"] > 1.0
+    assert rep["extra"]["bad_steps"] == 3
+
+
+def test_slo_monitor_explicit_cost_ceiling_wins():
+    mon = SloMonitor(budget_frac=0.5, horizon=4)
+    b = _FakeBatcher({"steady": 40}, slo_cost=100.0)
+    st = b.tenant_stats["steady"]
+    for step in range(10):
+        st.decode_step_costs.append(50.0)  # under the explicit ceiling
+        mon.observe(b, step)
+    assert mon.summary()["tenants"]["steady"]["bad_steps"] == 0
+
+
+def test_slo_monitor_failures_count_as_bad_steps():
+    rec = FlightRecorder()
+    mon = SloMonitor(recorder=rec, budget_frac=0.25, horizon=4)  # allow 1
+    b = _FakeBatcher({"steady": 40})
+    st = b.tenant_stats["steady"]
+    for step in range(4):
+        st.decode_step_costs.append(1.0)  # cost is fine...
+        st.failed += 1                    # ...but a request failed
+        mon.observe(b, step)
+    t = mon.summary()["tenants"]["steady"]
+    assert t["bad_steps"] == 4
+    assert rec.count("slo_burn") == 1
+
+
+def test_slo_monitor_ignores_unslod_tenants():
+    mon = SloMonitor(budget_frac=0.1, horizon=10)
+    b = _FakeBatcher({"free": 0})
+    b.tenant_stats["free"].decode_step_costs.append(1000.0)
+    mon.observe(b, 0)
+    assert mon.summary()["tenants"] == {}
+
+
+def test_slo_monitor_deterministic_across_seeds():
+    # same trace, same verdict: the burn step is a pure function of the
+    # cost sequence (no wall-clock in the accounting)
+    outcomes = set()
+    for seed in SEEDS:
+        mon = SloMonitor(budget_frac=0.1, horizon=20)
+        b = _FakeBatcher({"steady": 40})
+        st = b.tenant_stats["steady"]
+        for step in range(30):
+            st.decode_step_costs.append(50.0 if step % 3 == 0 else 1.0)
+            mon.observe(b, step)
+        t = mon.summary()["tenants"]["steady"]
+        outcomes.add((t["bad_steps"], t["first_burn_step"]))
+    assert len(outcomes) == 1  # identical on every run

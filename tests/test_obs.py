@@ -234,6 +234,66 @@ def test_errors_traced_and_contained():
         assert tel.errors_by_site == {"sched.item": 1}
 
 
+# -- open spans at export time (truncated, not dropped) ----------------------
+
+def test_open_span_survives_export_as_truncated():
+    obs.enable()
+    span = obs.trace_span("serve", "decode", {"slot": 1})
+    span.__enter__()  # still open when the export happens
+    try:
+        doc = obs_export.chrome_trace()
+        xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+        assert len(xs) == 1, "open span was silently dropped at export"
+        (e,) = xs
+        assert e["trunc"] is True
+        assert e["args"]["trunc"] is True
+        assert e["name"] == "decode" and e["cat"] == "serve"
+        assert e["dur"] >= 0
+    finally:
+        span.__exit__(None, None, None)
+    # after a normal exit the span is emitted once, closed, not truncated
+    evs = obs.snapshot()
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert len(spans) == 1 and not spans[0].get("trunc")
+    assert obs.open_span_events() == []
+
+
+def test_closed_spans_not_marked_truncated():
+    obs.enable()
+    with obs.trace_span("worker", "task"):
+        pass
+    doc = obs_export.chrome_trace()
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert len(xs) == 1 and "trunc" not in xs[0]
+
+
+def test_truncated_spans_are_conservation_safe():
+    # an open span swept into the export must not disturb the counter
+    # crosscheck: spans are never counted, only instants are
+    summary = _traced_run()
+    span = obs.trace_span("serve", "step")
+    span.__enter__()
+    try:
+        doc = obs_export.chrome_trace()
+        check = obs_export.crosscheck(doc, summary)
+        assert check["ok"], check["mismatches"]
+        assert any(e.get("trunc") for e in doc["traceEvents"]
+                   if e.get("ph") == "X")
+    finally:
+        span.__exit__(None, None, None)
+
+
+def test_export_without_open_spans_flag():
+    obs.enable()
+    span = obs.trace_span("serve", "decode")
+    span.__enter__()
+    try:
+        doc = obs_export.chrome_trace(include_open=False)
+        assert [e for e in doc["traceEvents"] if e.get("ph") == "X"] == []
+    finally:
+        span.__exit__(None, None, None)
+
+
 # -- telemetry growth (satellites) ------------------------------------------
 
 def test_summary_has_completions_errors_and_hist():
@@ -259,6 +319,38 @@ def test_log_histogram_buckets_and_merge():
     assert 1.0 <= s["p50_ms"] <= 2.1
     assert s["max_ms"] >= 1.0
     assert s["tail_p99_p50"] >= 1.0
+
+
+def test_log_histogram_diff_windows():
+    old = LogHistogram()
+    old.extend([1e-3] * 10)
+    new = old.copy()
+    new.extend([5e-2] * 5)
+    d = new.diff(old)
+    s = d.summary()
+    assert s["n"] == 5
+    # the window holds only the 50ms observations: p50 lands in that
+    # bucket (upper-edge convention overestimates by at most x2)
+    assert 50.0 <= s["p50_ms"] <= 110.0
+    # the originals are untouched (diff never resets global state)
+    assert old.summary()["n"] == 10 and new.summary()["n"] == 15
+
+
+def test_log_histogram_diff_rejects_negative_window():
+    a, b = LogHistogram(), LogHistogram()
+    b.extend([1e-3, 1e-3])
+    a.extend([1e-3])
+    with pytest.raises(ValueError):
+        a.diff(b)  # "newer" has fewer observations than "older"
+
+
+def test_log_histogram_merge_rejects_bucket_mismatch():
+    a, b = LogHistogram(), LogHistogram()
+    b.counts = b.counts[:-1]  # simulate a deserialized foreign shape
+    with pytest.raises(ValueError):
+        a.merge(b)
+    with pytest.raises(ValueError):
+        a.diff(b)
 
 
 def test_exchange_posted_completed_split():
